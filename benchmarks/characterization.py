@@ -1,0 +1,105 @@
+"""Paper §3 / Fig. 2 / Table 1 — duplex characterization.
+
+Reproduces: the bandwidth-vs-read-ratio curves for DDR5 and both CXL
+devices (random + sequential), the seven numbered observations' headline
+constants, and the topology table. Sources: the calibrated channel model
+(analytic) cross-checked by the step-wise simulator.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core import scheduler as sched
+from repro.core.requests import StreamSpec
+
+from benchmarks.common import Bench, write_csv
+
+PAPER = {   # §3 constants for the derived-delta columns
+    "cxl-256gb": {"improvement": 0.55, "peak": 34.4},
+    "cxl-512gb": {"improvement": 0.61, "peak": 57.8},
+    "ddr5-local": {"flatness": 0.26},
+}
+
+
+def ratio_sweep() -> list[list]:
+    rows = []
+    rs = jnp.linspace(0.0, 1.0, 21)
+    for name in ("ddr5-local", "cxl-256gb", "cxl-512gb"):
+        c = ch.PRESETS[name]
+        for seq in (False, True):
+            bw = ch.effective_bandwidth(c, rs, seq)
+            for r, b in zip(rs.tolist(), bw.tolist()):
+                rows.append([name, "seq" if seq else "rand",
+                             round(r, 2), round(b, 2)])
+    return rows
+
+
+def simulator_crosscheck(name: str, read_fraction: float) -> float:
+    """Steady-state simulator bandwidth at one ratio (GB/s)."""
+    c = ch.PRESETS[name]
+    specs = [StreamSpec(name=f"w{i}", pattern="uniform",
+                        offered_gbps=c.read_bw,       # overload
+                        read_fraction=read_fraction) for i in range(4)]
+    res = sched.simulate(c, specs, "cfs", sim=sched.SimConfig(steps=512))
+    return float(res.achieved_gbps())
+
+
+def run() -> Bench:
+    b = Bench("characterization")
+
+    rows = ratio_sweep()
+    write_csv("fig2_ratio_sweep.csv",
+              ["channel", "pattern", "read_fraction", "gbps"], rows)
+
+    for name in ("cxl-256gb", "cxl-512gb"):
+        t0 = time.monotonic()
+        d = ch.duplex_benefit(ch.PRESETS[name])
+        us = (time.monotonic() - t0) * 1e6
+        paper = PAPER[name]
+        b.row(f"obs1/{name}", us,
+              f"improvement={d['improvement_vs_write']:.3f} "
+              f"(paper {paper['improvement']:.2f}) "
+              f"peak={d['peak_gbps']:.1f}GB/s (paper {paper['peak']})")
+
+    t0 = time.monotonic()
+    flat = ch.duplex_benefit(ch.PRESETS["ddr5-local"])["flatness"]
+    b.row("obs1/ddr5-flatness", (time.monotonic() - t0) * 1e6,
+          f"flatness={flat:.3f} (paper ~0.26)")
+
+    # Obs 2: write/read asymmetry
+    for name, paper_ratio in (("cxl-512gb", 0.74), ("cxl-256gb", 0.93),
+                              ("ddr5-local", 0.99)):
+        c = ch.PRESETS[name]
+        b.row(f"obs2/{name}", 0.0,
+              f"write/read={c.write_bw / c.read_bw:.2f} "
+              f"(paper {paper_ratio})")
+
+    # Obs 5/6: sequential-vs-random asymmetry (CXL-512)
+    c = ch.PRESETS["cxl-512gb"]
+    b.row("obs6/pattern-sensitivity", 0.0,
+          f"read_boost={c.seq_read_boost:.2f}x (paper 3.83x) "
+          f"write_boost={c.seq_write_boost:.2f}x (paper 1.63x)")
+
+    # simulator cross-check at the duplex peak
+    t0 = time.monotonic()
+    sim_bw = simulator_crosscheck("cxl-512gb", 0.55)
+    us = (time.monotonic() - t0) * 1e6
+    b.row("simulator-crosscheck/cxl-512@0.55", us,
+          f"sim={sim_bw:.1f}GB/s analytic="
+          f"{float(ch.effective_bandwidth(c, 0.55)):.1f}GB/s")
+
+    # Table 1 topology (as configured in this framework's tier map)
+    write_csv("table1_topology.csv",
+              ["node", "type", "read_gbps", "write_gbps", "duplex",
+               "latency_ns"],
+              [[n, c.name, c.read_bw, c.write_bw, c.duplex, c.latency_ns]
+               for n, c in enumerate(ch.PRESETS.values())])
+    return b.done("fig2+obs0-6+table1")
+
+
+if __name__ == "__main__":
+    print(run().render())

@@ -1,0 +1,49 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import csv
+import io
+import os
+import time
+
+
+class Bench:
+    """Collects rows and renders the run.py CSV contract:
+    ``name,us_per_call,derived``."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.rows: list[tuple[str, float, str]] = []
+        self._t0 = time.monotonic()
+
+    def row(self, sub: str, us: float, derived: str):
+        self.rows.append((f"{self.name}/{sub}", us, derived))
+
+    def done(self, derived: str = ""):
+        total_us = (time.monotonic() - self._t0) * 1e6
+        self.rows.append((self.name, total_us, derived))
+        return self
+
+    def render(self) -> str:
+        buf = io.StringIO()
+        w = csv.writer(buf)
+        for name, us, derived in self.rows:
+            w.writerow([name, f"{us:.1f}", derived])
+        return buf.getvalue()
+
+
+def out_dir() -> str:
+    d = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "bench")
+    os.makedirs(d, exist_ok=True)
+    return d
+
+
+def write_csv(fname: str, header: list[str], rows: list[list]):
+    path = os.path.join(out_dir(), fname)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

@@ -1,0 +1,133 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run artifacts. Idempotent: rewrites the blocks between the AUTOGEN
+markers.
+
+  PYTHONPATH=src python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+from benchmarks.roofline import DRYRUN_DIR, analyse
+from repro.models import registry as R
+from repro import configs as configs_lib
+
+EXPERIMENTS = os.path.join(os.path.dirname(__file__), "..",
+                           "EXPERIMENTS.md")
+
+
+def _fmt_bytes(b):
+    if b >= 1e12:
+        return f"{b / 1e12:.2f}TB"
+    if b >= 1e9:
+        return f"{b / 1e9:.2f}GB"
+    if b >= 1e6:
+        return f"{b / 1e6:.1f}MB"
+    return f"{b:.0f}B"
+
+
+def _records():
+    recs = {}
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        if ".pre_" in path or ".iter" in path:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table() -> str:
+    recs = _records()
+    lines = [
+        "| arch | shape | mesh | status | HLO GFLOPs/dev | bytes/dev | "
+        "collective bytes/dev (AR/AG/RS/A2A/CP) | compile s |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in configs_lib.ARCH_IDS:
+        for shape in R.SHAPES:
+            if not R.runnable(arch, shape):
+                lines.append(
+                    f"| {arch} | {shape} | — | SKIP | — | — | "
+                    f"{R.skip_reason(arch, shape)[:60]}… | — |")
+                continue
+            for mesh in ("pod", "multipod"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | pending "
+                                 f"| — | — | — | — |")
+                    continue
+                if r["status"] != "ok":
+                    lines.append(f"| {arch} | {shape} | {mesh} | "
+                                 f"{r['status']} | — | — | — | — |")
+                    continue
+                c = r["cost_analysis"]
+                co = r["collectives"]["bytes_by_op"]
+                coll = "/".join(_fmt_bytes(co[k]) for k in (
+                    "all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute"))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | "
+                    f"{c.get('flops', 0) / 1e9:.1f} | "
+                    f"{_fmt_bytes(c.get('bytes accessed', 0))} | {coll} | "
+                    f"{r.get('compile_s', '-')} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = _records()
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| useful/HLO | bound-MFU | lever |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in configs_lib.ARCH_IDS:
+        for shape in R.SHAPES:
+            if not R.runnable(arch, shape):
+                continue
+            r = recs.get((arch, shape, "pod"))
+            if r is None or r.get("status") != "ok":
+                lines.append(f"| {arch} | {shape} | pending | | | | | | |")
+                continue
+            a = analyse(r)
+            if a["rolled"]:
+                lines.append(f"| {arch} | {shape} | — | — | — | "
+                             f"(rolled: compile/memory proof — costs "
+                             f"undercounted) | — | — | — |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {a['compute_s']:.2e} | "
+                f"{a['memory_s']:.2e} | {a['collective_s']:.2e} | "
+                f"**{a['dominant']}** | {a['useful_ratio']:.3f} | "
+                f"{a['mfu_bound']:.3f} | {a['note'][:54]}… |")
+    return "\n".join(lines)
+
+
+def inject(md: str, marker: str, table: str) -> str:
+    begin = f"<!-- AUTOGEN:{marker}:BEGIN -->"
+    end = f"<!-- AUTOGEN:{marker}:END -->"
+    pattern = re.compile(re.escape(begin) + ".*?" + re.escape(end),
+                         re.DOTALL)
+    repl = f"{begin}\n{table}\n{end}"
+    if pattern.search(md):
+        return pattern.sub(lambda _: repl, md)
+    return md + "\n" + repl + "\n"
+
+
+def main():
+    with open(EXPERIMENTS) as f:
+        md = f.read()
+    md = inject(md, "DRYRUN", dryrun_table())
+    md = inject(md, "ROOFLINE", roofline_table())
+    with open(EXPERIMENTS, "w") as f:
+        f.write(md)
+    print("EXPERIMENTS.md tables regenerated "
+          f"({len(_records())} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (run.py contract) and writes
+per-figure CSVs under experiments/bench/.
+
+  PYTHONPATH=src python -m benchmarks.run [--only characterization,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+MODULES = ("characterization", "microbench", "redis_like",
+           "llm_inference", "vectordb", "roofline")
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--only", default=None,
+                   help="comma-separated subset of: " + ",".join(MODULES))
+    args = p.parse_args()
+    todo = args.only.split(",") if args.only else list(MODULES)
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for name in todo:
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            bench = mod.run()
+            sys.stdout.write(bench.render())
+            sys.stdout.flush()
+        except Exception:                      # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR")
+            traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

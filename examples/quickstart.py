@@ -1,0 +1,70 @@
+"""Quickstart — the paper's result in three acts, in ~a minute on CPU.
+
+  1. characterize the duplex channel (paper §3, Obs 1);
+  2. A/B the duplex-aware scheduler against CFS on a phase-correlated
+     workload (paper §6.2);
+  3. train a reduced LM with the full stack (data → model → optimizer →
+     checkpoint) and serve it with batched decode.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as ch
+from repro.core import scheduler as sched
+from repro.core.requests import StreamSpec
+from repro.models import registry as R
+from repro.optim import AdamWConfig
+from repro.runtime.serve import DecodeServer, ServeConfig
+from repro.runtime.train import TrainConfig, Trainer
+
+
+def act1_characterize():
+    print("=== Act 1: duplex characterization (paper §3) ===")
+    for name in ("ddr5-local", "cxl-256gb", "cxl-512gb"):
+        d = ch.duplex_benefit(ch.PRESETS[name])
+        print(f"  {name:12s} peak {d['peak_gbps']:6.1f} GB/s at "
+              f"r={d['peak_read_fraction']:.2f}  "
+              f"duplex benefit {d['improvement_vs_write']:+.0%}")
+    print("  -> CXL gains ~55-61% at balanced mixes; DDR5 is flat.\n")
+
+
+def act2_schedule():
+    print("=== Act 2: duplex-aware scheduling A/B (paper §6.2) ===")
+    specs = [StreamSpec(name=f"worker{i}", pattern="phased",
+                        offered_gbps=8.0, read_fraction=0.5,
+                        phase_steps=64) for i in range(8)]
+    res = sched.compare_policies(ch.CXL_512, specs, ("cfs", "timeseries"),
+                                 sim=sched.SimConfig(steps=1024))
+    imp = sched.improvement(res, "timeseries", "cfs")
+    print(f"  8 phase-correlated workers, 4 cores, CXL-512 channel:")
+    print(f"  CFS        {res['cfs']['gbps']:6.1f} GB/s "
+          f"(lockstep: one direction idles)")
+    print(f"  CXLAimPod  {res['timeseries']['gbps']:6.1f} GB/s "
+          f"({imp:+.0%} — priming + quota dispatch)\n")
+
+
+def act3_train_and_serve():
+    print("=== Act 3: train + serve on the full stack ===")
+    api = R.build("smollm-135m", smoke=True)
+    trainer = Trainer(api, TrainConfig(
+        seq_len=64, global_batch=8, steps=30,
+        optim=AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=30)))
+    params, _, hist = trainer.run()
+    print(f"  arch={api.arch_id} (reduced) params="
+          f"{api.param_count / 1e6:.1f}M-family")
+    print(f"  loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
+          f"over {len(hist)} steps")
+    server = DecodeServer(api, params, ServeConfig(cache_len=64))
+    out = server.generate(jnp.ones((2, 4), jnp.int32), 12)
+    print(f"  served {out.shape[0]}x{out.shape[1]} greedy tokens: "
+          f"{out[0][:8].tolist()}...")
+
+
+if __name__ == "__main__":
+    print(f"devices: {jax.devices()}\n")
+    act1_characterize()
+    act2_schedule()
+    act3_train_and_serve()

@@ -1,0 +1,61 @@
+"""Serving with a tiered KV cache — the paper's capacity story, end to end.
+
+A reduced LM decodes batched requests while its KV pages round-trip an
+int8-quantized host pool through the duplex offload engine (page-ins
+co-issued with evictions; the fused Pallas duplex kernel does
+dequant+quant in one pass). Reports the modelled duplex-vs-serial link
+timing — the serving analogue of the paper's +71.6% decode claim.
+
+Run:  PYTHONPATH=src python examples/serve_offload.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import registry as R
+from repro.runtime.serve import DecodeServer, OffloadedKVCache, ServeConfig
+
+
+def main():
+    api = R.build("llama3.2-3b", smoke=True)
+    params = api.init(jax.random.PRNGKey(0))
+
+    print("=== batched greedy decode ===")
+    server = DecodeServer(api, params, ServeConfig(cache_len=128))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 8), 0,
+                                 api.cfg.vocab)
+    out = server.generate(prompts, 16)
+    print(f"generated {out.shape} tokens; row0: {out[0][:10].tolist()}")
+
+    print("\n=== tiered KV cache: HBM working set + int8 host pool ===")
+    # 64 logical KV blocks, only 16 HBM-resident (4x oversubscription —
+    # the 671B-in-CXL regime at miniature scale)
+    kv = OffloadedKVCache(n_blocks=64, hbm_blocks=16, block_shape=(16, 128))
+    blocks = {b: jax.random.normal(jax.random.PRNGKey(b), (16, 128)
+                                   ).astype(jnp.bfloat16)
+              for b in range(32)}
+    for b, x in blocks.items():
+        kv.write_block(b, x)
+    kv.stats = {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
+                "serial_us": 0.0}
+    # decode steps touch rotating 8-block working sets
+    for step in range(12):
+        kv.touch([(step * 8 + i) % 32 for i in range(8)])
+    s = kv.stats
+    print(f"page-ins {s['page_ins']}, page-outs {s['page_outs']}")
+    print(f"modelled link time: duplex {s['duplex_us']:.1f}us vs "
+          f"phase-separated {s['serial_us']:.1f}us "
+          f"-> {kv.duplex_speedup():.2f}x")
+
+    # verify the working set round-tripped the int8 tier correctly
+    worst = 0.0
+    for b, x in blocks.items():
+        back = kv.read_block(b)
+        worst = max(worst, float(jnp.max(jnp.abs(
+            back.astype(jnp.float32) - x.astype(jnp.float32)))))
+    print(f"max int8-roundtrip error across 32 blocks: {worst:.4f}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

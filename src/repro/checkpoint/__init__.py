@@ -1,0 +1,3 @@
+from repro.checkpoint.sharded import (
+    CheckpointManager, save_checkpoint, load_checkpoint, latest_step,
+)

@@ -1,0 +1,344 @@
+"""Channel models for duplex-aware memory scheduling (CXLAimPod §2-§3).
+
+Two granularities:
+
+1. Analytic effective-bandwidth curves ``effective_bandwidth`` — closed-form
+   models of half-duplex (DDR-style, bus-turnaround-penalized) and
+   full-duplex (CXL/PCIe/ICI-style, per-direction-capped with a duplex
+   coupling coefficient) channels.  Calibrated to the paper's measured
+   constants (§3 Observations 0-6) and used for napkin math + calibration
+   tests.
+
+2. Step-wise channel state machines consumed by the ``scheduler`` simulator:
+   each step the channel accepts per-direction byte grants and returns the
+   bytes actually moved, charging turnaround penalties on half-duplex
+   direction switches.
+
+Units: bandwidth in GB/s (1e9 bytes/s); latency/turnaround in nanoseconds;
+the simulator's timestep is 1 microsecond, so ``bytes_per_step = GBps * 1e3``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BYTES_PER_GB = 1.0e9
+STEP_NS = 1_000.0  # one simulator step == 1 us
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Static description of one memory channel / link.
+
+    Attributes:
+      name: human-readable identifier.
+      read_bw: peak read bandwidth, GB/s (random access, unloaded).
+      write_bw: peak write bandwidth, GB/s (random access).
+      duplex: True for full-duplex (separate TX/RX paths), False for a
+        shared half-duplex bus.
+      duplex_coupling: kappa in [0, 1] — fraction of minor-direction traffic
+        that overlaps with the major direction on a full-duplex link.
+        1.0 = ideal duplex, 0.0 = electrically duplex but serialized.
+      turnaround_ns: half-duplex bus direction-switch penalty (DDR5:
+        15-20 cycles ~= 11.25-15 ns at 6400 MT/s).
+      batch_bytes: controller batching granularity used to amortize
+        turnaround on half-duplex buses.
+      latency_ns: loaded access latency (DDR5 75-85, CXL 130-200).
+      seq_read_boost: sequential/random read bandwidth ratio (Obs 6:
+        CXL reads are 3.8x more pattern-sensitive than writes).
+      seq_write_boost: sequential/random write bandwidth ratio.
+    """
+
+    name: str
+    read_bw: float
+    write_bw: float
+    duplex: bool
+    duplex_coupling: float = 0.0
+    turnaround_ns: float = 0.0
+    batch_bytes: float = 4096.0
+    latency_ns: float = 100.0
+    seq_read_boost: float = 1.0
+    seq_write_boost: float = 1.0
+
+    def direction_bw(self, sequential: bool) -> tuple[float, float]:
+        if sequential:
+            return (self.read_bw * self.seq_read_boost,
+                    self.write_bw * self.seq_write_boost)
+        return (self.read_bw, self.write_bw)
+
+    def bytes_per_step(self, sequential: bool = False) -> tuple[float, float]:
+        r, w = self.direction_bw(sequential)
+        scale = BYTES_PER_GB * STEP_NS * 1e-9
+        return (r * scale, w * scale)
+
+
+# ---------------------------------------------------------------------------
+# Calibrated presets.
+#
+# Paper constants (§3):
+#   DDR5 (2 NUMA nodes): random 64GB-buffer avg 166.7 GB/s, range 153-189
+#     (±26% flat), write/read parity 0.99x, peak 198.8 GB/s @64 threads.
+#   CXL-256GB: random avg 27.8 GB/s, peak 34.4 @50% reads, pure-write 22.2
+#     (+55% duplex benefit), write/read 0.93x.
+#   CXL-512GB: random avg 48.6 GB/s, peak 57.8 @55% reads, pure-write 35.9
+#     (+61%), write/read 0.75x; sequential reads 186.6 vs random 48.8
+#     (3.83x), sequential writes 59.0 vs random 36.2 (1.63x); sequential
+#     peak 197.0 @95% reads.
+# TPU-side presets (v5e targets, per system prompt): HBM 819 GB/s,
+# ICI ~50 GB/s per direction per link, PCIe gen5 x16 host link ~64 GB/s
+# per direction.
+# ---------------------------------------------------------------------------
+
+DDR5_LOCAL = ChannelModel(
+    name="ddr5-local",
+    read_bw=189.0,
+    write_bw=187.0,          # 0.99x parity (Obs 2)
+    duplex=False,
+    turnaround_ns=13.0,       # 15-20 cycles @ 6400 MT/s
+    batch_bytes=20000.0,      # effective controller batching (write draining)
+                              # calibrated: mixed-ratio floor 151 GB/s, ~25%
+                              # flatness (paper: 153-189, "~26%")
+    latency_ns=80.0,
+    seq_read_boost=198.8 / 189.0,   # Obs 4 sequential/thread-peak
+    seq_write_boost=198.8 / 189.0,
+)
+
+CXL_256 = ChannelModel(
+    name="cxl-256gb",
+    read_bw=23.9,             # calibrated: peak 34.4 @ r~0.52, pure write 22.2
+    write_bw=22.2,
+    duplex=True,
+    duplex_coupling=0.66,
+    latency_ns=170.0,
+    seq_read_boost=3.0,
+    seq_write_boost=1.4,
+)
+
+CXL_512 = ChannelModel(
+    name="cxl-512gb",
+    read_bw=48.8,             # Obs 6 random reads
+    write_bw=36.2,            # Obs 6 random writes (0.74x)
+    duplex=True,
+    duplex_coupling=0.53,     # calibrated to 57.8 GB/s peak @ r~0.57
+    latency_ns=170.0,
+    seq_read_boost=186.6 / 48.8,   # 3.83x (Obs 6)
+    seq_write_boost=59.0 / 36.2,   # 1.63x
+)
+
+# --- TPU memory-hierarchy channels (the adaptation targets) ---
+
+HBM_V5E = ChannelModel(
+    # HBM is DDR-derived: pseudo-channel bus, effectively half-duplex with a
+    # tiny turnaround; the interesting duplexing on TPU is at the DMA-engine
+    # level (concurrent in-flight read and write DMAs hide this).
+    name="hbm-v5e",
+    read_bw=819.0,
+    write_bw=819.0,
+    duplex=False,
+    turnaround_ns=5.0,
+    batch_bytes=512.0,
+    latency_ns=400.0,
+)
+
+ICI_LINK = ChannelModel(
+    name="ici-link",
+    read_bw=50.0,             # per direction, per link
+    write_bw=50.0,
+    duplex=True,
+    duplex_coupling=0.95,     # near-ideal: independent SerDes per direction
+    latency_ns=1_000.0,
+)
+
+PCIE_HOST = ChannelModel(
+    # Host<->HBM DMA path; this is our "CXL pool" link (DESIGN.md §2).
+    name="pcie-host",
+    read_bw=60.0,
+    write_bw=60.0,
+    duplex=True,
+    duplex_coupling=0.90,
+    latency_ns=2_000.0,
+)
+
+PRESETS: dict[str, ChannelModel] = {
+    c.name: c
+    for c in (DDR5_LOCAL, CXL_256, CXL_512, HBM_V5E, ICI_LINK, PCIE_HOST)
+}
+
+
+# ---------------------------------------------------------------------------
+# Analytic effective-bandwidth model.
+# ---------------------------------------------------------------------------
+
+def effective_bandwidth(channel: ChannelModel,
+                        read_fraction,
+                        sequential: bool = False):
+    """Steady-state achievable bandwidth (GB/s) at a given read fraction.
+
+    Full-duplex: time per byte is the major direction's service time plus the
+    non-overlapped (1-kappa) share of the minor direction's:
+
+        t(r) = max(r/Br, w/Bw) + (1 - kappa) * min(r/Br, w/Bw)
+
+    Half-duplex: directions serialize and each read<->write alternation
+    charges a turnaround amortized over the controller batch:
+
+        t(r) = r/Br + w/Bw + 4 r w * (2 * turnaround / batch_bytes)
+
+    (the 4rw factor peaks at balanced mixes where alternations are densest;
+    the controller's same-direction batching is what keeps DDR flat rather
+    than cratered — Obs 1.)
+
+    Accepts scalar or jnp array ``read_fraction``; returns GB/s.
+    """
+    r = jnp.asarray(read_fraction, dtype=jnp.float32)
+    w = 1.0 - r
+    br, bw = channel.direction_bw(sequential)
+    tr = r / br
+    tw = w / bw
+    if channel.duplex:
+        t = (jnp.maximum(tr, tw)
+             + (1.0 - channel.duplex_coupling) * jnp.minimum(tr, tw))
+    else:
+        # turnaround seconds per byte moved, amortized over batch;
+        # switch_cost is s/byte, tr/tw are s/GB, so scale by bytes-per-GB.
+        switch_cost = 2.0 * channel.turnaround_ns * 1e-9 / channel.batch_bytes
+        t = tr + tw + 4.0 * r * w * switch_cost * BYTES_PER_GB
+    return 1.0 / t
+
+
+def duplex_benefit(channel: ChannelModel, sequential: bool = False,
+                   grid: int = 101) -> dict[str, float]:
+    """Peak-vs-pure-write improvement, reproducing Obs 1's 55-61% metric."""
+    rs = jnp.linspace(0.0, 1.0, grid)
+    bws = effective_bandwidth(channel, rs, sequential)
+    peak_idx = int(jnp.argmax(bws))
+    pure_write = float(effective_bandwidth(channel, 0.0, sequential))
+    pure_read = float(effective_bandwidth(channel, 1.0, sequential))
+    peak = float(bws[peak_idx])
+    return {
+        "peak_gbps": peak,
+        "peak_read_fraction": float(rs[peak_idx]),
+        "pure_write_gbps": pure_write,
+        "pure_read_gbps": pure_read,
+        "improvement_vs_write": peak / pure_write - 1.0,
+        "improvement_vs_read": peak / pure_read - 1.0,
+        "flatness": (float(jnp.max(bws)) - float(jnp.min(bws)))
+                    / float(jnp.min(bws)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Step-wise channel state machine (consumed by scheduler.simulate).
+# ---------------------------------------------------------------------------
+
+class ChannelState(NamedTuple):
+    """Dynamic channel state carried through the lax.scan simulation."""
+    last_direction: jnp.ndarray   # int32: 0=read, 1=write, 2=idle
+    cooldown: jnp.ndarray         # float32: residual turnaround, fraction of a step
+    total_read: jnp.ndarray       # float32 bytes moved
+    total_write: jnp.ndarray
+    switches: jnp.ndarray         # int32 direction switches charged
+
+
+def init_channel_state() -> ChannelState:
+    return ChannelState(
+        last_direction=jnp.int32(2),
+        cooldown=jnp.float32(0.0),
+        total_read=jnp.float32(0.0),
+        total_write=jnp.float32(0.0),
+        switches=jnp.int32(0),
+    )
+
+
+class ChannelParams(NamedTuple):
+    """ChannelModel lowered to jnp scalars for use inside jit/scan."""
+    read_cap: jnp.ndarray    # bytes per step
+    write_cap: jnp.ndarray
+    duplex: jnp.ndarray      # bool
+    coupling: jnp.ndarray    # float32
+    turnaround_frac: jnp.ndarray  # turnaround as fraction of one step
+
+
+def channel_params(channel: ChannelModel,
+                   sequential: bool = False) -> ChannelParams:
+    rc, wc = channel.bytes_per_step(sequential)
+    return ChannelParams(
+        read_cap=jnp.float32(rc),
+        write_cap=jnp.float32(wc),
+        duplex=jnp.asarray(channel.duplex),
+        coupling=jnp.float32(channel.duplex_coupling),
+        turnaround_frac=jnp.float32(channel.turnaround_ns / STEP_NS),
+    )
+
+
+def channel_step(params: ChannelParams, state: ChannelState,
+                 want_read, want_write):
+    """Move up to (want_read, want_write) bytes in one step.
+
+    Returns (new_state, moved_read, moved_write).
+
+    Full-duplex: each direction is capped independently; the minor direction
+    additionally loses (1-coupling) of the major direction's occupancy
+    (shared controller/protocol overhead).
+
+    Half-duplex: the bus serves one direction per step — the one with more
+    demand — charging ``turnaround_frac`` of the step when the direction
+    differs from the previous step. A batched controller would serve
+    alternating steps; the per-step winner-take-all plus cooldown reproduces
+    that behavior at step granularity.
+    """
+    want_read = jnp.maximum(want_read, 0.0)
+    want_write = jnp.maximum(want_write, 0.0)
+
+    def full_duplex(_):
+        # Invert the analytic time model (``effective_bandwidth``): serving
+        # (r, w) takes  T = max(r/Br, w/Bw) + (1-kappa)·min(r/Br, w/Bw)
+        # steps; within one step the demand is scaled by 1/T. Keeps the
+        # step simulation consistent with the calibrated curves at
+        # saturation (same steady-state bandwidth at the demand mix).
+        r_occ = want_read / params.read_cap
+        w_occ = want_write / params.write_cap
+        leak = 1.0 - params.coupling
+        T = (jnp.maximum(r_occ, w_occ)
+             + leak * jnp.minimum(r_occ, w_occ))
+        scale = jnp.where(T > 1.0, 1.0 / jnp.maximum(T, 1e-9), 1.0)
+        moved_r = want_read * scale
+        moved_w = want_write * scale
+        new_dir = jnp.where(moved_r + moved_w > 0.0, jnp.int32(0),
+                            jnp.int32(2))
+        return moved_r, moved_w, new_dir, jnp.float32(0.0), jnp.int32(0)
+
+    def half_duplex(_):
+        serve_read = want_read >= want_write
+        new_dir = jnp.where(serve_read, jnp.int32(0), jnp.int32(1))
+        switched = jnp.logical_and(state.last_direction != jnp.int32(2),
+                                   new_dir != state.last_direction)
+        budget = jnp.clip(1.0 - state.cooldown
+                          - jnp.where(switched, params.turnaround_frac, 0.0),
+                          0.0, 1.0)
+        moved_r = jnp.where(serve_read,
+                            jnp.minimum(want_read, params.read_cap * budget),
+                            0.0)
+        moved_w = jnp.where(serve_read, 0.0,
+                            jnp.minimum(want_write,
+                                        params.write_cap * budget))
+        idle = (moved_r + moved_w) <= 0.0
+        new_dir = jnp.where(idle, state.last_direction, new_dir)
+        return (moved_r, moved_w, new_dir, jnp.float32(0.0),
+                jnp.where(switched & ~idle, jnp.int32(1), jnp.int32(0)))
+
+    moved_r, moved_w, new_dir, cooldown, switch = jax.lax.cond(
+        params.duplex, full_duplex, half_duplex, operand=None)
+
+    new_state = ChannelState(
+        last_direction=new_dir,
+        cooldown=cooldown,
+        total_read=state.total_read + moved_r,
+        total_write=state.total_write + moved_w,
+        switches=state.switches + switch,
+    )
+    return new_state, moved_r, moved_w

@@ -1,0 +1,163 @@
+"""Hierarchical memory-access hints — the cgroup mechanism of CXLAimPod §4.5.
+
+The paper conveys application hints through the cgroup filesystem because it
+is standardized, hierarchical (system defaults -> container -> process), and
+secure. The JAX-framework analogue is a ``HintTree``: a tree of named scopes
+(``/`` = system, ``/train``, ``/train/attention``, ``/serve/kv_cache``...)
+each optionally carrying a ``MemoryHint``. Unset fields inherit from the
+nearest ancestor that sets them, mirroring cgroup hierarchical composition.
+
+Model configs and offload streams attach hint paths; the scheduler resolves
+them at plan-build time. ``HintTree`` is plain Python (config-level); the
+resolved numeric hints are lowered to arrays for the jit'd scheduler.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Iterator
+
+
+_UNSET = None
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryHint:
+    """Declared expectations for one scope. ``None`` = inherit.
+
+    Attributes:
+      read_fraction: expected fraction of traffic (by bytes) that is reads.
+      sequential: access pattern (True sequential / False random).
+      priority: scheduling weight (vruntime weight in Algorithm 1).
+      phase_period_us: if the workload alternates direction phases, their
+        period; lets the time-series policy seed its forecast.
+      duplex_opt_in: scopes may opt out of duplex intervention entirely
+        (the paper's answer to the Redis read-heavy regression).
+    """
+
+    read_fraction: float | None = None
+    sequential: bool | None = None
+    priority: float | None = None
+    phase_period_us: float | None = None
+    duplex_opt_in: bool | None = None
+
+    FIELDS = ("read_fraction", "sequential", "priority", "phase_period_us",
+              "duplex_opt_in")
+
+    def merged_over(self, parent: "MemoryHint") -> "MemoryHint":
+        """Child values win; unset child fields inherit from parent."""
+        values = {}
+        for f in self.FIELDS:
+            mine = getattr(self, f)
+            values[f] = mine if mine is not _UNSET else getattr(parent, f)
+        return MemoryHint(**values)
+
+    def resolved(self) -> "MemoryHint":
+        """Fill remaining unset fields with system defaults."""
+        return self.merged_over(SYSTEM_DEFAULT)
+
+
+SYSTEM_DEFAULT = MemoryHint(read_fraction=0.5, sequential=False,
+                            priority=1.0, phase_period_us=0.0,
+                            duplex_opt_in=True)
+
+
+def _split(path: str) -> list[str]:
+    if not path.startswith("/"):
+        raise ValueError(f"hint path must be absolute, got {path!r}")
+    return [p for p in path.split("/") if p]
+
+
+class HintTree:
+    """A cgroup-like hierarchy of MemoryHints."""
+
+    def __init__(self) -> None:
+        self._hints: dict[str, MemoryHint] = {"/": MemoryHint()}
+
+    # -- mutation ----------------------------------------------------------
+    def set(self, path: str, hint: MemoryHint) -> None:
+        parts = _split(path)
+        # materialize intermediate scopes so iteration order is stable
+        for i in range(1, len(parts)):
+            inter = "/" + "/".join(parts[:i])
+            self._hints.setdefault(inter, MemoryHint())
+        self._hints["/" + "/".join(parts)] = hint
+
+    def remove(self, path: str) -> None:
+        if path == "/":
+            self._hints["/"] = MemoryHint()
+        else:
+            self._hints.pop(path, None)
+
+    # -- resolution --------------------------------------------------------
+    def resolve(self, path: str) -> MemoryHint:
+        """Walk root->leaf merging hints, then fill system defaults.
+
+        Paths need not have been ``set``; they resolve through ancestors,
+        exactly like reading an unset cgroup attribute.
+        """
+        parts = _split(path) if path != "/" else []
+        merged = self._hints.get("/", MemoryHint()).merged_over(SYSTEM_DEFAULT)
+        prefix = ""
+        for part in parts:
+            prefix += "/" + part
+            node = self._hints.get(prefix)
+            if node is not None:
+                merged = node.merged_over(merged)
+        return merged
+
+    def paths(self) -> Iterator[str]:
+        return iter(sorted(self._hints))
+
+    # -- serialization (the "filesystem interface") -------------------------
+    def to_json(self) -> str:
+        payload = {
+            path: {f: getattr(h, f) for f in MemoryHint.FIELDS
+                   if getattr(h, f) is not None}
+            for path, h in sorted(self._hints.items())
+        }
+        return json.dumps(payload, indent=2, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "HintTree":
+        tree = cls()
+        for path, fields in json.loads(text).items():
+            tree.set(path, MemoryHint(**fields))
+        return tree
+
+
+def default_training_hints() -> HintTree:
+    """Framework defaults for a training job (DESIGN.md §4).
+
+    Scopes mirror where traffic originates: forward activations are
+    write-then-read, gradient reduce-scatter is TX-heavy, optimizer offload
+    reads+writes host memory, checkpoint writes are pure-write sequential.
+    """
+    t = HintTree()
+    t.set("/train", MemoryHint(priority=1.0))
+    t.set("/train/fwd", MemoryHint(read_fraction=0.6))
+    t.set("/train/bwd", MemoryHint(read_fraction=0.45))
+    t.set("/train/grads", MemoryHint(read_fraction=0.1, sequential=True))
+    t.set("/train/opt_offload",
+          MemoryHint(read_fraction=0.5, sequential=True, priority=0.8))
+    t.set("/train/checkpoint",
+          MemoryHint(read_fraction=0.0, sequential=True, priority=0.2))
+    return t
+
+
+def default_serving_hints() -> HintTree:
+    """Serving job defaults, per the paper's §6.4 layer analysis."""
+    t = HintTree()
+    t.set("/serve", MemoryHint(priority=1.0))
+    t.set("/serve/attention",
+          MemoryHint(read_fraction=0.85, phase_period_us=64.0))
+    t.set("/serve/ffn", MemoryHint(read_fraction=0.60, phase_period_us=64.0))
+    t.set("/serve/kv_cache/page_in",
+          MemoryHint(read_fraction=1.0, sequential=True))
+    t.set("/serve/kv_cache/page_out",
+          MemoryHint(read_fraction=0.0, sequential=True))
+    # read-heavy prompt processing opts out (paper: intervention withdrawn).
+    t.set("/serve/prefill", MemoryHint(read_fraction=0.95,
+                                       duplex_opt_in=False))
+    return t

@@ -1,0 +1,481 @@
+"""Pluggable scheduling policies (CXLAimPod §4.4, Algorithm 1).
+
+The paper's policy engine exposes ``init() / schedule(state) / update(feedback)``
+and treats the *process* as the schedulable unit: ``duplex_select_cpu``
+co-locates read-intensive and write-intensive processes so their interleaved
+requests reach the memory controller as balanced bidirectional traffic.
+
+Here the schedulable unit is a *stream* (see DESIGN.md §2). Each simulator
+step, a policy assigns run weights ``w in [0,1]^S`` (sum <= n_slots, the CPU
+slots) to the S streams; running streams drain their backlog toward the
+channel. Direction-oblivious policies under-utilize a full-duplex channel
+whenever the *selected set* is unidirectional; duplex-aware policies pick
+sets whose aggregate read fraction approaches the channel optimum ``r*``.
+
+Policies (registry key):
+  * ``cfs``          — fair share, direction-oblivious (the paper's baseline).
+  * ``ddr_batching`` — serve the majority direction, defer the minority
+                       (FR-FCFS/PAR-BS doctrine; right for DDR, wrong for CXL).
+  * ``threshold``    — static duplex-aware greedy mix toward ``r*``.
+  * ``round_robin``  — rotate slot ownership; direction-oblivious.
+  * ``timeseries``   — Algorithm 1: sliding-window metrics, EWMA trend
+                       forecasting, oversubscription detection, vruntime
+                       deadlines, adaptive slices, hysteresis, and
+                       intervention-withdrawal for unidirectional traffic.
+  * ``hinted``       — timeseries seeded by cgroup hints (§4.5): declared
+                       read fractions replace the EWMA bootstrap and
+                       ``duplex_opt_in=False`` scopes are never migrated.
+
+All policy functions are pure and jit/scan-compatible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Obs(NamedTuple):
+    """Per-step observation handed to ``schedule`` (paper: 'state object')."""
+    step: jnp.ndarray           # int32 scalar
+    backlog_read: jnp.ndarray   # (S,) bytes of pending read work
+    backlog_write: jnp.ndarray  # (S,)
+    arrival_read: jnp.ndarray   # (S,) this step's newly offered work
+    arrival_write: jnp.ndarray  # (S,)
+    head_read: jnp.ndarray      # (S,) read bytes in the next program
+    head_write: jnp.ndarray     # (S,) segment (what WILL run if dispatched
+                                #      — the BPF task-profile analogue)
+    prev_weights: jnp.ndarray   # (S,) last step's run weights
+    prev_util: jnp.ndarray      # float scalar, channel utilization in [0,1]
+    opt_r: jnp.ndarray          # channel's optimal aggregate read fraction
+    duplex: jnp.ndarray         # bool scalar
+    hint_rf: jnp.ndarray        # (S,) declared read fractions (cgroup hints)
+    hint_priority: jnp.ndarray  # (S,) vruntime weights
+    hint_opt_in: jnp.ndarray    # (S,) bool, duplex intervention allowed
+
+    def head_rf(self) -> jnp.ndarray:
+        tot = self.head_read + self.head_write
+        return jnp.where(tot > 0, self.head_read / jnp.maximum(tot, 1e-9),
+                         0.5)
+
+
+class Feedback(NamedTuple):
+    """Post-dispatch feedback handed to ``update``."""
+    moved_read: jnp.ndarray     # (S,) bytes actually serviced
+    moved_write: jnp.ndarray    # (S,)
+    utilization: jnp.ndarray    # scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyParams:
+    n_slots: float = 4.0          # concurrent CPU slots ("cores")
+    window: int = 32              # sliding window length (Alg 1 W_t)
+    ewma_alpha: float = 0.12      # trend smoothing
+    oversub_threads_per_core: float = 1.5   # §4.4.1 detection constants
+    oversub_util: float = 0.85
+    hysteresis: float = 0.25      # min weight change worth a migration
+    base_slice: float = 1.0       # nominal time slice (steps)
+    unidir_cutoff: float = 0.12   # |mix - {0,1}| below which we withdraw
+    temperature: float = 0.35     # deadline -> weight softmax temperature
+
+
+class Policy(NamedTuple):
+    """The paper's three-method policy interface, as pure functions."""
+    name: str
+    init: Callable[[PolicyParams, int], Any]
+    schedule: Callable[[PolicyParams, Any, Obs], tuple[Any, jnp.ndarray]]
+    update: Callable[[PolicyParams, Any, Feedback], Any]
+
+
+def _normalize_slots(raw: jnp.ndarray, n_slots: float) -> jnp.ndarray:
+    """Scale nonnegative weights so their sum is min(sum, n_slots), <=1 each."""
+    raw = jnp.clip(raw, 0.0, 1.0)
+    total = jnp.sum(raw)
+    scale = jnp.where(total > n_slots, n_slots / jnp.maximum(total, 1e-9), 1.0)
+    return raw * scale
+
+
+def _active(obs: Obs) -> jnp.ndarray:
+    return (obs.backlog_read + obs.backlog_write) > 0.0
+
+
+# ---------------------------------------------------------------------------
+# cfs — fair share, direction-oblivious (baseline in every paper figure).
+# ---------------------------------------------------------------------------
+
+def _cfs_init(params: PolicyParams, n_streams: int):
+    return ()
+
+
+def _cfs_schedule(params: PolicyParams, state, obs: Obs):
+    active = _active(obs).astype(jnp.float32)
+    w = _normalize_slots(active, params.n_slots)
+    return state, w
+
+
+def _cfs_update(params: PolicyParams, state, fb: Feedback):
+    return state
+
+
+CFS = Policy("cfs", _cfs_init, _cfs_schedule, _cfs_update)
+
+
+# ---------------------------------------------------------------------------
+# ddr_batching — group same-direction work, minimize switches (§2.3's
+# "engineers batch similar operations together").
+# ---------------------------------------------------------------------------
+
+class _BatchState(NamedTuple):
+    direction: jnp.ndarray   # int32, 0 = favor reads, 1 = favor writes
+    residual: jnp.ndarray    # float32, batch budget remaining
+
+
+def _batch_init(params: PolicyParams, n_streams: int):
+    return _BatchState(jnp.int32(0), jnp.float32(0.0))
+
+
+def _batch_schedule(params: PolicyParams, state: _BatchState, obs: Obs):
+    tot_r = jnp.sum(obs.backlog_read)
+    tot_w = jnp.sum(obs.backlog_write)
+    # switch direction only when the current one is (nearly) drained.
+    cur_dir_bytes = jnp.where(state.direction == 0, tot_r, tot_w)
+    switch = cur_dir_bytes <= 0.0
+    direction = jnp.where(switch,
+                          jnp.where(tot_r >= tot_w, jnp.int32(0),
+                                    jnp.int32(1)),
+                          state.direction)
+    backlog = jnp.where(direction == 0, obs.backlog_read, obs.backlog_write)
+    raw = (backlog > 0.0).astype(jnp.float32)
+    w = _normalize_slots(raw, params.n_slots)
+    # if nothing matches the favored direction, fall back to fair share.
+    fallback = _normalize_slots(_active(obs).astype(jnp.float32),
+                                params.n_slots)
+    w = jnp.where(jnp.sum(w) > 0.0, w, fallback)
+    return _BatchState(direction, state.residual), w
+
+
+def _batch_update(params: PolicyParams, state: _BatchState, fb: Feedback):
+    return state
+
+
+DDR_BATCHING = Policy("ddr_batching", _batch_init, _batch_schedule,
+                      _batch_update)
+
+
+# ---------------------------------------------------------------------------
+# round_robin — rotate slots; direction-oblivious.
+# ---------------------------------------------------------------------------
+
+def _rr_init(params: PolicyParams, n_streams: int):
+    return jnp.int32(0)
+
+
+def _rr_schedule(params: PolicyParams, state, obs: Obs):
+    n = obs.backlog_read.shape[0]
+    k = max(1, int(params.n_slots))
+    idx = (jnp.arange(n) - state) % n
+    raw = (idx < k).astype(jnp.float32) * _active(obs).astype(jnp.float32)
+    w = _normalize_slots(raw, params.n_slots)
+    return (state + k) % n, w
+
+
+RR = Policy("round_robin", _rr_init, _rr_schedule,
+            lambda p, s, f: s)
+
+
+# ---------------------------------------------------------------------------
+# threshold — static duplex-aware greedy (the simplest CXLAimPod policy).
+# ---------------------------------------------------------------------------
+
+def _rank_desc(scores: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each element under descending sort (0 = largest)."""
+    order = jnp.argsort(-scores)
+    return jnp.zeros_like(order).at[order].set(
+        jnp.arange(scores.shape[0]))
+
+
+def _quota_weights(rf: jnp.ndarray, urgency: jnp.ndarray,
+                   active: jnp.ndarray, opt_in: jnp.ndarray,
+                   n_slots: float, opt_r: jnp.ndarray) -> jnp.ndarray:
+    """duplex_select_cpu as slot quotas: direction first, fairness within.
+
+    Fill ~k·opt_r slots with the most-urgent read-leaning streams and the
+    rest with the most-urgent write-leaning ones, so the *running set's*
+    aggregate mix tracks the channel optimum; leftover slots (a direction
+    group too small) fall back to global urgency order. Fairness-first
+    selection re-synchronizes phase-correlated workers (it dispatches the
+    whole starved cohort at once) — direction-first is what keeps the
+    pipeline interleaved.
+    """
+    NEG = -1e9
+    k = max(1, int(n_slots))
+    act = active > 0.0
+    grouped = act & opt_in
+    readers = grouped & (rf >= 0.5)
+    writers = grouped & (rf < 0.5)
+    n_read = jnp.sum(readers)
+    n_write = jnp.sum(writers)
+    k_r = jnp.clip(jnp.round(k * opt_r).astype(jnp.int32), 0, k)
+    k_r = jnp.minimum(k_r, n_read)
+    k_w = jnp.minimum(k - k_r, n_write)
+    k_r = jnp.minimum(k - k_w, n_read)     # redistribute scarce groups
+    r_rank = _rank_desc(jnp.where(readers, urgency, NEG))
+    w_rank = _rank_desc(jnp.where(writers, urgency, NEG))
+    sel = (readers & (r_rank < k_r)) | (writers & (w_rank < k_w))
+    # leftover slots: best remaining active streams (incl. opted-out)
+    rem = k - jnp.sum(sel)
+    o_rank = _rank_desc(jnp.where(act & ~sel, urgency, NEG))
+    sel = sel | (act & ~sel & (o_rank < rem))
+    return _normalize_slots(sel.astype(jnp.float32), n_slots)
+
+
+def _thr_schedule(params: PolicyParams, state, obs: Obs):
+    active = _active(obs).astype(jnp.float32)
+    head_tot = obs.head_read + obs.head_write
+    agg = jnp.sum(head_tot * active)
+    work_mix = jnp.where(agg > 0,
+                         jnp.sum(obs.head_read * active)
+                         / jnp.maximum(agg, 1e-9), obs.opt_r)
+    target = 0.5 * work_mix + 0.5 * obs.opt_r
+    w_duplex = _quota_weights(obs.head_rf(), jnp.ones_like(active), active,
+                              obs.hint_opt_in, params.n_slots, target)
+    w_fair = _normalize_slots(active, params.n_slots)
+    w = jnp.where(obs.duplex, w_duplex, w_fair)
+    return state, w
+
+
+THRESHOLD = Policy("threshold", _cfs_init, _thr_schedule, _cfs_update)
+
+
+# ---------------------------------------------------------------------------
+# timeseries — Algorithm 1.
+# ---------------------------------------------------------------------------
+
+class TimeSeriesState(NamedTuple):
+    window: jnp.ndarray       # (W, 4): [demand_r, demand_w, moved, util]
+    cursor: jnp.ndarray       # int32 ring-buffer cursor
+    ewma_rf: jnp.ndarray      # (S,) per-stream read-fraction forecast
+    ewma_rate: jnp.ndarray    # (S,) per-stream demand forecast (bytes/step)
+    volatility: jnp.ndarray   # (S,) EWMA |forecast error| -> adaptive slice
+    vruntime: jnp.ndarray     # (S,) weighted service received
+    prev_w: jnp.ndarray       # (S,) last weights (hysteresis)
+    oversub: jnp.ndarray      # bool
+
+
+def _ts_init_with(params: PolicyParams, n_streams: int,
+                  rf0: jnp.ndarray | float = 0.5) -> TimeSeriesState:
+    rf0 = jnp.broadcast_to(jnp.asarray(rf0, jnp.float32), (n_streams,))
+    return TimeSeriesState(
+        window=jnp.zeros((params.window, 4), jnp.float32),
+        cursor=jnp.int32(0),
+        ewma_rf=rf0,
+        ewma_rate=jnp.zeros((n_streams,), jnp.float32),
+        volatility=jnp.zeros((n_streams,), jnp.float32),
+        vruntime=jnp.zeros((n_streams,), jnp.float32),
+        prev_w=jnp.zeros((n_streams,), jnp.float32),
+        oversub=jnp.asarray(False),
+    )
+
+
+def _ts_init(params: PolicyParams, n_streams: int) -> TimeSeriesState:
+    return _ts_init_with(params, n_streams, 0.5)
+
+
+def _ts_phase1_update_window(params: PolicyParams, state: TimeSeriesState,
+                             obs: Obs) -> TimeSeriesState:
+    """Alg 1 lines 4-7: CollectSystemMetrics / UpdateSlidingWindow / trends."""
+    sample = jnp.stack([
+        jnp.sum(obs.arrival_read),
+        jnp.sum(obs.arrival_write),
+        jnp.sum(obs.backlog_read + obs.backlog_write),
+        obs.prev_util,
+    ])
+    window = state.window.at[state.cursor % params.window].set(sample)
+    cursor = state.cursor + 1
+
+    a = params.ewma_alpha
+    arr = obs.arrival_read + obs.arrival_write
+    inst_rf = jnp.where(arr > 0.0, obs.arrival_read / jnp.maximum(arr, 1e-9),
+                        state.ewma_rf)
+    err = jnp.abs(inst_rf - state.ewma_rf)
+    ewma_rf = (1 - a) * state.ewma_rf + a * inst_rf
+    ewma_rate = (1 - a) * state.ewma_rate + a * arr
+    volatility = (1 - a) * state.volatility + a * err
+    return state._replace(window=window, cursor=cursor, ewma_rf=ewma_rf,
+                          ewma_rate=ewma_rate, volatility=volatility)
+
+
+def _ts_phase2_detect_oversub(params: PolicyParams, state: TimeSeriesState,
+                              obs: Obs) -> jnp.ndarray:
+    """Alg 1 lines 8-10: runnable/slots > 1.5 while utilization > 85%."""
+    runnable = jnp.sum(_active(obs).astype(jnp.float32))
+    per_core = runnable / params.n_slots
+    filled = jnp.minimum(state.cursor, params.window).astype(jnp.float32)
+    mean_util = jnp.sum(state.window[:, 3]) / jnp.maximum(filled, 1.0)
+    return jnp.logical_and(per_core > params.oversub_threads_per_core,
+                           mean_util > params.oversub_util)
+
+
+def _prime_weights(params: PolicyParams, state: TimeSeriesState,
+                   obs: Obs) -> jnp.ndarray:
+    """Pipeline priming for lockstep-unidirectional oversubscription.
+
+    When every runnable task is in the same direction phase (correlated
+    workers — the paper's sequential microbenchmark), fair rotation keeps
+    them in lockstep forever: the aggregate stays unidirectional and one
+    duplex direction idles every phase. The duplex move is deliberate
+    short-term unfairness: pin a stable subset so it advances into the
+    next phase early; thereafter leaders' writes overlap laggards' reads
+    ('proactive task migration before queue imbalances occur', §6.2).
+    """
+    active = _active(obs).astype(jnp.float32)
+    sticky = state.prev_w * active
+    k = params.n_slots
+    first_k = (jnp.cumsum(active) <= k).astype(jnp.float32) * active
+    use_sticky = jnp.sum(sticky) >= 1.0
+    raw = jnp.where(use_sticky, sticky, first_k)
+    return _normalize_slots(raw, k)
+
+
+def _ts_phase34_dispatch(params: PolicyParams, state: TimeSeriesState,
+                         obs: Obs, rf_forecast: jnp.ndarray,
+                         frozen: jnp.ndarray) -> jnp.ndarray:
+    """Alg 1 lines 11-23: vruntime deadlines + duplex-aware CPU selection.
+
+    ``frozen`` marks streams exempt from duplex intervention (opt-outs).
+    """
+    active = _active(obs).astype(jnp.float32)
+    # deadline = vruntime + slice / weight ; adaptive slice shrinks under
+    # volatility so bursty streams are rescheduled sooner.
+    slice_ = params.base_slice / (1.0 + 4.0 * state.volatility)
+    slice_ = jnp.where(state.oversub, slice_ * 0.5, slice_)  # aggressive mode
+    deadline = state.vruntime + slice_ / jnp.maximum(obs.hint_priority, 1e-3)
+    # earlier deadline -> larger share (smooth EEVDF-style ordering)
+    any_active = jnp.any(active > 0)
+    dmin = jnp.min(jnp.where(active > 0, deadline, jnp.inf))
+    dl = deadline - jnp.where(any_active, dmin, 0.0)
+    urgency = jnp.where(active > 0, jnp.exp(-dl / params.temperature), 0.0)
+    w_fair = _normalize_slots(urgency, params.n_slots)
+
+    # duplex-aware slot quotas (SelectCPU). The quota target is the
+    # *queued work composition*: in steady state the served mix must match
+    # the arriving mix or one direction's backlog diverges — the
+    # scheduler's job is to serve that mix CONCURRENTLY (vs. lockstep
+    # alternation), not to chase the channel's peak ratio. Urgency
+    # (vruntime deadlines) orders streams within each direction group.
+    opt_in = frozen <= 0.0
+    head_tot = obs.head_read + obs.head_write
+    agg = jnp.sum(head_tot * active)
+    work_mix = jnp.where(agg > 0,
+                         jnp.sum(obs.head_read * active)
+                         / jnp.maximum(agg, 1e-9), obs.opt_r)
+    target = 0.5 * work_mix + 0.5 * obs.opt_r
+    w_duplex = _quota_weights(rf_forecast, urgency, active, opt_in,
+                              params.n_slots, target)
+    all_frozen = jnp.all(frozen > 0.0)
+    w = jnp.where(jnp.logical_or(~obs.duplex, all_frozen), w_fair,
+                  w_duplex)
+    return _normalize_slots(w * active, params.n_slots)
+
+
+def _ts_schedule(params: PolicyParams, state: TimeSeriesState, obs: Obs):
+    state = _ts_phase1_update_window(params, state, obs)
+    oversub = _ts_phase2_detect_oversub(params, state, obs)
+    state = state._replace(oversub=oversub)
+
+    # task profile at dispatch: head-of-queue direction when the task has
+    # pending work (the paper reads per-task r/w profiles from BPF maps in
+    # duplex_select_cpu), EWMA trend otherwise.
+    head = obs.head_read + obs.head_write
+    rf_forecast = jnp.where(head > 0, obs.head_rf(), state.ewma_rf)
+    # Aggregate head mix decides the mode:
+    #   unidirectional + oversubscribed -> pipeline priming (de-sync the
+    #     lockstep so opposing phases start to overlap);
+    #   unidirectional + undersubscribed -> withdraw (the paper's Redis
+    #     read-heavy lesson: nothing to pair, migration is pure overhead);
+    #   mixed -> duplex-aware set selection toward opt_r.
+    rate = jnp.maximum(head + state.ewma_rate, 1e-9)
+    global_mix = jnp.sum(rf_forecast * rate) / jnp.sum(rate)
+    unidir = jnp.logical_or(global_mix < params.unidir_cutoff,
+                            global_mix > 1.0 - params.unidir_cutoff)
+    frozen = jnp.where(unidir, jnp.ones_like(rf_forecast),
+                       jnp.zeros_like(rf_forecast))
+    w_normal = _ts_phase34_dispatch(params, state, obs, rf_forecast,
+                                    frozen)
+    w_prime = _prime_weights(params, state, obs)
+    w = jnp.where(jnp.logical_and(unidir, state.oversub), w_prime,
+                  w_normal)
+    return state._replace(prev_w=w), w
+
+
+def _ts_update(params: PolicyParams, state: TimeSeriesState, fb: Feedback):
+    served = fb.moved_read + fb.moved_write
+    # vruntime advances by service weighted by priority=1 (weights are folded
+    # into the deadline in schedule()); normalize to keep values bounded.
+    v = state.vruntime + served / jnp.maximum(jnp.sum(served) + 1e-9, 1e-9)
+    v = v - jnp.min(v)
+    return state._replace(vruntime=v)
+
+
+TIMESERIES = Policy("timeseries", _ts_init, _ts_schedule, _ts_update)
+
+
+# ---------------------------------------------------------------------------
+# hinted — timeseries + cgroup hints (§4.5).
+# ---------------------------------------------------------------------------
+
+def _hint_init(params: PolicyParams, n_streams: int) -> TimeSeriesState:
+    return _ts_init(params, n_streams)
+
+
+def _hint_schedule(params: PolicyParams, state: TimeSeriesState, obs: Obs):
+    state = _ts_phase1_update_window(params, state, obs)
+    oversub = _ts_phase2_detect_oversub(params, state, obs)
+    state = state._replace(oversub=oversub)
+    # hints replace the measured forecast: precise from step 0, and exactly
+    # what cgroups buy us over pure observability (§4.5 paragraph 2); the
+    # dispatch-time task profile still wins when work is queued.
+    head = obs.head_read + obs.head_write
+    rf_forecast = jnp.where(head > 0, obs.head_rf(), obs.hint_rf)
+    opt_out = 1.0 - obs.hint_opt_in.astype(jnp.float32)
+    rate = jnp.maximum(head + state.ewma_rate, 1e-9)
+    global_mix = jnp.sum(rf_forecast * rate) / jnp.sum(rate)
+    unidir = jnp.logical_or(global_mix < params.unidir_cutoff,
+                            global_mix > 1.0 - params.unidir_cutoff)
+    frozen = jnp.maximum(opt_out,
+                         jnp.where(unidir, 1.0, 0.0) *
+                         jnp.ones_like(rf_forecast))
+    w_normal = _ts_phase34_dispatch(params, state, obs, rf_forecast,
+                                    frozen)
+    w_prime = _prime_weights(params, state, obs)
+    all_opted_out = jnp.max(obs.hint_opt_in.astype(jnp.float32)) < 0.5
+    prime_ok = jnp.logical_and(jnp.logical_and(unidir, state.oversub),
+                               jnp.logical_not(all_opted_out))
+    w = jnp.where(prime_ok, w_prime, w_normal)
+    return state._replace(prev_w=w), w
+
+
+HINTED = Policy("hinted", _hint_init, _hint_schedule, _ts_update)
+
+
+REGISTRY: dict[str, Policy] = {
+    p.name: p for p in (CFS, DDR_BATCHING, RR, THRESHOLD, TIMESERIES, HINTED)
+}
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown policy {name!r}; available: {sorted(REGISTRY)}"
+        ) from None
+
+
+def migration_volume(prev_w: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """L1 weight reallocation per step — the migration overhead proxy that
+    the simulator charges against channel capacity (cache disruption)."""
+    return 0.5 * jnp.sum(jnp.abs(w - prev_w))

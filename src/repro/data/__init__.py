@@ -1,0 +1,3 @@
+from repro.data.pipeline import (
+    DataConfig, SyntheticLMData, make_batch, device_batch,
+)

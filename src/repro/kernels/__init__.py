@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the serving/training hot-spots.
+
+  flash_attention — blockwise online-softmax attention (causal/SWA/prefix,
+                    GQA, masked-block skipping)
+  duplex_stream   — fused page-in-dequant + page-out-quant KV migration
+                    (the paper's duplex insight at DMA level)
+  rwkv6_scan      — chunked WKV6 state scan (VMEM-resident state)
+
+Each has a jit'd wrapper in ``ops.py`` and a pure-jnp oracle in ``ref.py``.
+"""
+
+from repro.kernels import ops, ref

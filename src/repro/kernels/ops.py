@@ -1,0 +1,40 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the wrappers default to ``interpret=True`` so the
+kernel bodies execute in Python for correctness validation; on TPU they
+compile natively. The pure-jnp oracles live in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import duplex_stream as _ds
+from repro.kernels import flash_attention as _fa
+from repro.kernels import rwkv6_scan as _rs
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
+                    q_block=128, kv_block=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               prefix_len=prefix_len, q_block=q_block,
+                               kv_block=kv_block, interpret=interpret)
+
+
+def duplex_kv_stream(in_q, in_scale, out_x, *, fused=True, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ds.duplex_kv_stream(in_q, in_scale, out_x, fused=fused,
+                                interpret=interpret)
+
+
+def wkv6(r, k, v, w, u, *, chunk=128, interpret=None):
+    if interpret is None:
+        interpret = _default_interpret()
+    return _rs.wkv6(r, k, v, w, u, chunk=chunk, interpret=interpret)

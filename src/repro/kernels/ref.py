@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models.layers import AttnSpec
+from repro.models.rwkv6 import wkv_scan
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              prefix_len: int = 0):
+    """Dense reference attention. q: (B,S,H,hd); k,v: (B,S,KV,hd)."""
+    spec = AttnSpec(num_heads=q.shape[2], num_kv_heads=k.shape[2],
+                    head_dim=q.shape[3], causal=causal, window=window,
+                    prefix_len=prefix_len, q_block=q.shape[1])
+    return nn.attention(q, k, v, spec)
+
+
+def wkv6(r, k, v, w, u, state=None):
+    """Reference WKV6 scan (delegates to the model's lax.scan oracle)."""
+    return wkv_scan(r, k, v, w, u, state)
+
+
+def quantize_int8(x):
+    """Per-row symmetric int8 quantization. x: (..., T, D) -> (q, scale)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def duplex_kv_stream(in_q, in_scale, out_x):
+    """Oracle for the fused duplex page-in/page-out transform.
+
+    page-in: dequantize (in_q, in_scale) -> bf16;
+    page-out: quantize out_x -> (int8, scale). Both in one pass.
+    """
+    in_deq = dequantize_int8(in_q, in_scale)
+    out_q, out_scale = quantize_int8(out_x)
+    return in_deq, out_q, out_scale

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, sharding rules, step builders, dry-run,
+train/serve CLI drivers."""

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax import)
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 pod / 2×16×16 multi-pod) over 512
+     placeholder host devices;
+  2. resolves param/optimizer/batch/cache shardings from launch/sharding.py;
+  3. ``jit(step).lower(ShapeDtypeStructs).compile()`` — no allocation ever
+     happens (kimi-k2 is 2 TB of bf16 params);
+  4. records ``memory_analysis()`` (fits-in-HBM evidence),
+     ``cost_analysis()`` (FLOPs/bytes for §Roofline) and the collective
+     bytes parsed from the post-SPMD HLO, into a JSON artifact under
+     ``experiments/dryrun/``.
+
+Layer scans are unrolled by default (``--no-unroll`` to disable): XLA's
+HloCostAnalysis visits a while-loop body once, so rolled scans would
+undercount FLOPs and collective bytes by ~num_layers×.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import configs as configs_lib
+from repro.launch import sharding as sh
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models import registry as R
+from repro.models import runconfig
+from repro.optim import adamw_init
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "pred": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5,
+    "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1, "f8e8m0fnu": 1, "f4e2m1fn": 0.5,
+}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in post-SPMD HLO.
+
+    Methodology note (EXPERIMENTS.md §Dry-run): the *result* shapes of the
+    fused collective ops are used as the byte measure — consistent across
+    iterations, which is what the §Perf loop needs.
+    """
+    per_op: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.lstrip()
+        if "=" not in stripped:
+            continue
+        rhs = stripped.split("=", 1)[1]
+        m = re.search(r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(-start)?\(", rhs)
+        if not m:
+            continue
+        op = m.group(1)
+        # result shapes appear before the op name on the rhs
+        result_part = rhs[: m.start()]
+        per_op[op] += _shape_bytes(result_part)
+        counts[op] += 1
+    return {"bytes_by_op": per_op, "counts": counts,
+            "total_bytes": sum(per_op.values())}
+
+
+# ---------------------------------------------------------------------------
+# cell lowering
+# ---------------------------------------------------------------------------
+
+def _eval_shape_params(api):
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0)))
+
+
+def _opt_specs(param_spec_tree):
+    return {"m": param_spec_tree, "v": param_spec_tree,
+            "step": jax.sharding.PartitionSpec()}
+
+
+def build_cell(api, shape_name: str, mesh):
+    """Returns (jitted_fn, example_args, shardings_info)."""
+    cell = R.SHAPES[shape_name]
+    params_shape = _eval_shape_params(api)
+    pspecs, unmatched = sh.param_specs(api, params_shape, mesh)
+    psh = sh.named(pspecs, mesh)
+    inputs = R.input_specs(api, shape_name)
+
+    if cell.kind == "train":
+        bspecs = sh.batch_specs(inputs, mesh, api)
+        bsh = sh.named(bspecs, mesh)
+        if api.arch_id in steps_lib.HOST_OPTIMIZER:
+            step = steps_lib.make_grads_step(api)
+            fn = jax.jit(step, in_shardings=(psh, bsh),
+                         out_shardings=(psh, None))
+            args = (params_shape, inputs)
+        else:
+            opt_shape = jax.eval_shape(adamw_init, params_shape)
+            osh = sh.named(_opt_specs(pspecs), mesh)
+            step = steps_lib.make_train_step(api)
+            fn = jax.jit(step, in_shardings=(psh, osh, bsh),
+                         out_shardings=(psh, osh, None),
+                         donate_argnums=(0, 1))
+            args = (params_shape, opt_shape, inputs)
+    elif cell.kind == "prefill":
+        bspecs = sh.batch_specs(inputs, mesh, api)
+        bsh = sh.named(bspecs, mesh)
+        step = steps_lib.make_prefill_step(api)
+        fn = jax.jit(step, in_shardings=(psh, bsh))
+        args = (params_shape, inputs)
+    else:  # decode
+        dspecs = sh.decode_input_specs(inputs, api, mesh)
+        dsh = sh.named(dspecs, mesh)
+        step = steps_lib.make_serve_step(api)
+        fn = jax.jit(step,
+                     in_shardings=(psh, dsh["cache"], dsh["tokens"],
+                                   dsh["pos"]),
+                     out_shardings=(None, dsh["cache"]),
+                     donate_argnums=(1,))
+        args = (params_shape, inputs["cache"], inputs["tokens"],
+                inputs["pos"])
+    return fn, args, {"unmatched_params": unmatched}
+
+
+def _recurrence_flops(api, shape_name: str) -> float:
+    """Global FLOPs executed inside rolled *time* scans (wkv / ssd).
+
+    HloCostAnalysis counts a while body once; the time recurrences stay
+    rolled (S=4096..32768 trips — unrolling is infeasible), so the roofline
+    adds this analytic term. Decode cells have a single trip (no correction).
+    """
+    cell = R.SHAPES[shape_name]
+    if cell.kind == "decode":
+        return 0.0
+    mult = 4.0 if cell.kind == "train" else 1.0   # bwd≈2×fwd, remat +1×
+    tokens = cell.global_batch * cell.seq_len
+    cfg = api.cfg
+    if api.family == "ssm":       # rwkv6: ~6 flops per (d × hs) per token
+        return mult * 6.0 * tokens * cfg.num_layers * cfg.d_model \
+            * cfg.head_size
+    if api.family == "hybrid":    # mamba2: ~8 flops per (d_inner × N)
+        ms = cfg.mamba_spec()
+        return mult * 8.0 * tokens * cfg.num_layers * ms.d_inner \
+            * ms.d_state
+    return 0.0
+
+
+def _model_flops(api, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs: 6·N·D train, 2·N·D forward (MoE: N_active)."""
+    cell = R.SHAPES[shape_name]
+    n = api.active_param_count
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch           # decode: one token
+
+
+def _memory_analysis(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {"source": "unavailable"}
+        out = {}
+        for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                  "output_size_in_bytes", "temp_size_in_bytes",
+                  "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+                  "host_argument_size_in_bytes", "host_output_size_in_bytes",
+                  "host_temp_size_in_bytes"):
+            if hasattr(m, k):
+                out[k] = int(getattr(m, k))
+        out["source"] = "xla"
+        return out
+    except Exception as e:                       # noqa: BLE001
+        return {"source": f"error: {e}"}
+
+
+def _analytic_arg_bytes(args, mesh) -> float:
+    """Per-device input bytes assuming the declared shardings (upper bound:
+    replicated leaves count fully)."""
+    n_dev = float(np.prod(list(mesh.shape.values())))
+    total = sum(np.prod(l.shape) * l.dtype.itemsize
+                for l in jax.tree.leaves(args))
+    return float(total), n_dev
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             unroll: bool = True, remat: bool = True,
+             save: bool = True, lower_only: bool = False) -> dict:
+    t0 = time.monotonic()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    api = R.build(arch)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": int(np.prod(list(mesh.shape.values()))),
+        "mesh_shape": dict(mesh.shape),
+        "param_count": api.param_count,
+        "active_param_count": api.active_param_count,
+        "model_flops": _model_flops(api, shape_name),
+        "recurrence_flops": _recurrence_flops(api, shape_name),
+        "unroll": unroll, "remat": remat,
+        "status": "error",
+    }
+    try:
+        fn, args, info = build_cell(api, shape_name, mesh)
+        rec.update(info)
+        kind = R.SHAPES[shape_name].kind
+        _f, tp_axis, dp_axes = sh.parallelism(api, mesh)
+        with runconfig.options(remat=(remat and kind == "train"),
+                               scan_unroll=unroll,
+                               shard_env=(mesh, dp_axes, tp_axis)):
+            lowered = fn.lower(*args)
+        t_lower = time.monotonic()
+        if lower_only:
+            rec["status"] = "lowered"
+            rec["lower_s"] = round(t_lower - t0, 2)
+            return rec
+        compiled = lowered.compile()
+        t_compile = time.monotonic()
+
+        cost = compiled.cost_analysis() or {}
+        rec["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "transcendentals",
+                                          "optimal_seconds")}
+        rec["memory_analysis"] = _memory_analysis(compiled)
+        hlo = compiled.as_text()
+        rec["collectives"] = parse_collectives(hlo)
+        rec["hlo_lines"] = hlo.count("\n")
+        arg_bytes, n_dev = _analytic_arg_bytes(args, mesh)
+        rec["global_arg_bytes"] = arg_bytes
+        rec["lower_s"] = round(t_lower - t0, 2)
+        rec["compile_s"] = round(t_compile - t_lower, 2)
+        rec["status"] = "ok"
+    except Exception as e:                       # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.monotonic() - t0, 2)
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        fname = f"{arch}_{shape_name}_{mesh_kind}.json".replace("/", "-")
+        with open(os.path.join(OUT_DIR, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=configs_lib.ARCH_IDS)
+    p.add_argument("--shape", choices=tuple(R.SHAPES))
+    p.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                   default="both")
+    p.add_argument("--all", action="store_true",
+                   help="run every runnable (arch × shape) cell")
+    p.add_argument("--no-unroll", action="store_true")
+    p.add_argument("--no-remat", action="store_true")
+    p.add_argument("--lower-only", action="store_true",
+                   help="stop after .lower() (fast sharding validation)")
+    args = p.parse_args()
+
+    if args.all:
+        todo = R.cells()
+    elif args.arch and args.shape:
+        if not R.runnable(args.arch, args.shape):
+            print(f"SKIP {args.arch} × {args.shape}: "
+                  f"{R.skip_reason(args.arch, args.shape)}")
+            return 0
+        todo = [(args.arch, args.shape)]
+    else:
+        p.error("--all or both --arch and --shape required")
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    failures = 0
+    for arch, shape_name in todo:
+        for mk in meshes:
+            rec = run_cell(arch, shape_name, mk,
+                           unroll=not args.no_unroll,
+                           remat=not args.no_remat,
+                           lower_only=args.lower_only,
+                           save=not args.lower_only)
+            flops = rec.get("cost_analysis", {}).get("flops", float("nan"))
+            coll = rec.get("collectives", {}).get("total_bytes",
+                                                  float("nan"))
+            print(f"[{rec['status']:7s}] {arch} × {shape_name} × {mk}: "
+                  f"hlo_flops={flops:.3e} coll_bytes={coll:.3e} "
+                  f"compile={rec.get('compile_s', '-')}s", flush=True)
+            if rec["status"] not in ("ok", "lowered"):
+                failures += 1
+                print(rec.get("error", ""))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

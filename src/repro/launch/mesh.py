@@ -1,0 +1,38 @@
+"""Production mesh construction (multi-pod dry-run spec).
+
+Defined as functions — importing this module never touches jax device
+state, so smoke tests see 1 device while the dry-run (which sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any import)
+sees its 512 placeholder devices.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(model: int = 1):
+    """A mesh over however many devices exist (CPU smoke / examples)."""
+    n = jax.device_count()
+    if n % model:
+        raise ValueError(f"{n} devices not divisible by model={model}")
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The batch-sharding axes for this mesh (pod folds into data)."""
+    return (("pod", "data") if "pod" in mesh.axis_names else ("data",))
+
+
+def axis_size(mesh, axes: tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return size

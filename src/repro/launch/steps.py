@@ -1,0 +1,63 @@
+"""Step functions lowered by the dry-run and driven by train.py/serve.py.
+
+  train_step   — fwd + bwd + bf16 grad cast (collective compression) + AdamW
+  grads_step   — fwd + bwd only (host-offloaded-optimizer archs: the update
+                 streams moments through the duplex engine outside the graph)
+  prefill_step — full-sequence forward returning last-position logits
+                 (serving prefill; full (B,S,V) logits would be 100s of GB
+                 at the 32k shapes and no server materializes them)
+  serve_step   — one-token decode against the KV/state cache
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.registry import ModelAPI
+from repro.optim import AdamWConfig, adamw_update
+
+# archs that train with the optimizer in the host pool (capacity story)
+HOST_OPTIMIZER = frozenset({"kimi-k2-1t-a32b"})
+
+
+def make_train_step(api: ModelAPI, optim: AdamWConfig | None = None):
+    optim = optim or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, _metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(optim.grad_dtype), grads)
+        params, opt_state, om = adamw_update(optim, params, grads, opt_state)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_grads_step(api: ModelAPI, optim: AdamWConfig | None = None):
+    optim = optim or AdamWConfig()
+
+    def grads_step(params, batch):
+        (loss, _metrics), grads = jax.value_and_grad(
+            api.loss_fn, has_aux=True)(params, batch)
+        grads = jax.tree.map(lambda g: g.astype(optim.grad_dtype), grads)
+        return grads, {"loss": loss}
+
+    return grads_step
+
+
+def make_prefill_step(api: ModelAPI):
+    def prefill_step(params, batch):
+        logits = api.forward(params, batch)
+        next_logits = logits[:, -1, :].astype(jnp.float32)
+        return jnp.argmax(next_logits, axis=-1), next_logits
+
+    return prefill_step
+
+
+def make_serve_step(api: ModelAPI):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = api.decode_step(params, cache, tokens, pos)
+        return jnp.argmax(logits.astype(jnp.float32), axis=-1), cache
+
+    return serve_step

@@ -1,0 +1,6 @@
+"""Model zoo: the ten assigned architectures behind a uniform ModelAPI."""
+
+from repro.models.registry import (
+    ModelAPI, SHAPES, LONG_CONTEXT_OK, FAMILY, build, input_specs,
+    runnable, skip_reason, cells,
+)

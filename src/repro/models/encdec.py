@@ -1,0 +1,248 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Assigned arch: whisper-base (6L enc + 6L dec, d_model=512, 8H MHA,
+d_ff=2048, vocab=51865). Per the assignment the conv audio frontend is a
+STUB: ``input_specs()`` supplies precomputed frame embeddings (B, S, D);
+the backbone is the transformer enc-dec.
+
+Deviation (DESIGN §8): sinusoidal positions on both sides (real Whisper uses
+learned decoder positions capped at 448 — the assigned 32k decode shape
+requires unbounded positions, so we use sinusoids everywhere).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models import runconfig
+from repro.models.layers import AttnSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    num_layers: int            # per side
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    dtype: jnp.dtype = jnp.bfloat16
+
+    def attn_spec(self, causal: bool) -> AttnSpec:
+        return AttnSpec(num_heads=self.num_heads,
+                        num_kv_heads=self.num_kv_heads,
+                        head_dim=self.d_model // self.num_heads,
+                        causal=causal, qkv_bias=True)
+
+    def param_count(self) -> int:
+        d, hd = self.d_model, self.d_model // self.num_heads
+        attn = d * hd * (self.num_heads * 2 + self.num_kv_heads * 2) + 3 * d
+        mlp = 2 * d * self.d_ff + self.d_ff + d
+        enc = self.num_layers * (attn + mlp + 4 * d)
+        dec = self.num_layers * (2 * attn + mlp + 6 * d)
+        return enc + dec + self.vocab * d + 4 * d
+
+    active_param_count = param_count
+
+
+def sinusoid_positions(length: int, dim: int, offset=0):
+    pos = (jnp.arange(length) + offset)[:, None].astype(jnp.float32)
+    div = jnp.exp(-jnp.arange(0, dim, 2, dtype=jnp.float32)
+                  * (jnp.log(10000.0) / dim))
+    ang = pos * div
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_block_init(key, cfg: EncDecConfig, causal: bool):
+    return {"ln": nn.layernorm_init(cfg.d_model, cfg.dtype),
+            "attn": nn.attn_init(key, cfg.d_model, cfg.attn_spec(causal),
+                                 cfg.dtype)}
+
+
+def _enc_layer_init(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 2)
+    return {
+        "self": _attn_block_init(ks[0], cfg, causal=False),
+        "ln_mlp": nn.layernorm_init(cfg.d_model, cfg.dtype),
+        "mlp": nn.gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: EncDecConfig):
+    ks = jax.random.split(key, 3)
+    return {
+        "self": _attn_block_init(ks[0], cfg, causal=True),
+        "cross": _attn_block_init(ks[1], cfg, causal=False),
+        "ln_mlp": nn.layernorm_init(cfg.d_model, cfg.dtype),
+        "mlp": nn.gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def init(key, cfg: EncDecConfig):
+    k_embed, k_enc, k_dec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k_enc, cfg.num_layers)
+    dec_keys = jax.random.split(k_dec, cfg.num_layers)
+    return {
+        "embed": nn.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtype),
+        "enc_layers": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "ln_enc": nn.layernorm_init(cfg.d_model, cfg.dtype),
+        "dec_layers": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "ln_dec": nn.layernorm_init(cfg.d_model, cfg.dtype),
+    }
+
+
+def _cross_attend(block, x, enc_k, enc_v, spec: AttnSpec):
+    """x: (B, Sq, D); enc_k/enc_v: (B, Senc, H, hd) prebuilt cross KV."""
+    B, Sq, D = x.shape
+    h = nn.layernorm(block["ln"], x)
+    q = h @ block["attn"]["wq"] + block["attn"]["bq"]
+    q = q.reshape(B, Sq, spec.num_heads, spec.head_dim)
+    out = nn.attention(q, enc_k, enc_v,
+                       dataclasses.replace(spec, causal=False))
+    return x + out.reshape(B, Sq, -1) @ block["attn"]["wo"]
+
+
+def _cross_kv(block, enc_out, spec: AttnSpec):
+    B, S, D = enc_out.shape
+    k = (enc_out @ block["attn"]["wk"] + block["attn"]["bk"]).reshape(
+        B, S, spec.num_kv_heads, spec.head_dim)
+    v = (enc_out @ block["attn"]["wv"] + block["attn"]["bv"]).reshape(
+        B, S, spec.num_kv_heads, spec.head_dim)
+    return k, v
+
+
+def encode(params, cfg: EncDecConfig, frames):
+    """frames: (B, S_enc, D) stubbed frame embeddings -> (B, S_enc, D)."""
+    B, S, D = frames.shape
+    spec = cfg.attn_spec(causal=False)
+    x = frames.astype(cfg.dtype) + sinusoid_positions(S, D).astype(cfg.dtype)
+
+    def body(x, layer):
+        x = runconfig.constrain(x, ("dp", None, None))
+        h = nn.layernorm(layer["self"]["ln"], x)
+        # bidirectional self-attention, no RoPE (whisper uses abs positions)
+        q = h @ layer["self"]["attn"]["wq"] + layer["self"]["attn"]["bq"]
+        k = h @ layer["self"]["attn"]["wk"] + layer["self"]["attn"]["bk"]
+        v = h @ layer["self"]["attn"]["wv"] + layer["self"]["attn"]["bv"]
+        q = q.reshape(B, S, spec.num_heads, spec.head_dim)
+        k = k.reshape(B, S, spec.num_kv_heads, spec.head_dim)
+        v = v.reshape(B, S, spec.num_kv_heads, spec.head_dim)
+        att = nn.attention(q, k, v, spec)
+        x = x + att.reshape(B, S, -1) @ layer["self"]["attn"]["wo"]
+        h = nn.layernorm(layer["ln_mlp"], x)
+        return x + nn.gelu_mlp(layer["mlp"], h), None
+
+    x, _ = runconfig.scan(body, x, params["enc_layers"])
+    return nn.layernorm(params["ln_enc"], x)
+
+
+def decode_train(params, cfg: EncDecConfig, tokens, enc_out):
+    """Teacher-forced decoder. tokens: (B, S_dec) -> logits."""
+    B, S = tokens.shape
+    self_spec = cfg.attn_spec(causal=True)
+    x = (params["embed"][tokens]
+         + sinusoid_positions(S, cfg.d_model).astype(cfg.dtype))
+
+    def body(x, layer):
+        x = runconfig.constrain(x, ("dp", None, None))
+        h = nn.layernorm(layer["self"]["ln"], x)
+        q = h @ layer["self"]["attn"]["wq"] + layer["self"]["attn"]["bq"]
+        k = h @ layer["self"]["attn"]["wk"] + layer["self"]["attn"]["bk"]
+        v = h @ layer["self"]["attn"]["wv"] + layer["self"]["attn"]["bv"]
+        q = q.reshape(B, S, self_spec.num_heads, self_spec.head_dim)
+        k = k.reshape(B, S, self_spec.num_kv_heads, self_spec.head_dim)
+        v = v.reshape(B, S, self_spec.num_kv_heads, self_spec.head_dim)
+        att = nn.attention(q, k, v, self_spec)
+        x = x + att.reshape(B, S, -1) @ layer["self"]["attn"]["wo"]
+        ck, cv = _cross_kv(layer["cross"], enc_out, self_spec)
+        x = _cross_attend(layer["cross"], x, ck, cv, self_spec)
+        h = nn.layernorm(layer["ln_mlp"], x)
+        return x + nn.gelu_mlp(layer["mlp"], h), None
+
+    x, _ = runconfig.scan(body, x, params["dec_layers"])
+    x = nn.layernorm(params["ln_dec"], x)
+    return runconfig.constrain(x @ params["embed"].T, ("dp", None, "tp"))
+
+
+def forward(params, cfg: EncDecConfig, tokens, frames):
+    enc_out = encode(params, cfg, frames)
+    return decode_train(params, cfg, tokens, enc_out), jnp.float32(0.0)
+
+
+def loss_fn(params, cfg: EncDecConfig, batch, **_):
+    logits, aux = forward(params, cfg, batch["tokens"], batch["frames"])
+    return nn.cross_entropy(logits, batch["labels"]), {"aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serving)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: EncDecConfig, batch: int, cache_len: int,
+               enc_len: int):
+    spec = cfg.attn_spec(causal=True)
+    L = cfg.num_layers
+
+    def one(_):
+        return nn.attn_cache_init(batch, cache_len, spec, cfg.dtype)
+
+    return {
+        "self": jax.vmap(one)(jnp.arange(L)),
+        "cross_k": jnp.zeros((L, batch, enc_len, spec.num_kv_heads,
+                              spec.head_dim), cfg.dtype),
+        "cross_v": jnp.zeros((L, batch, enc_len, spec.num_kv_heads,
+                              spec.head_dim), cfg.dtype),
+    }
+
+
+def build_cache(params, cfg: EncDecConfig, frames, batch: int,
+                cache_len: int):
+    """Encode + precompute per-layer cross KV (the serving 'prefill')."""
+    enc_out = encode(params, cfg, frames)
+    spec = cfg.attn_spec(causal=True)
+    cache = init_cache(cfg, batch, cache_len, frames.shape[1])
+
+    def per_layer(layer):
+        return _cross_kv(layer["cross"], enc_out, spec)
+
+    ck, cv = jax.vmap(per_layer)(params["dec_layers"])
+    return dict(cache, cross_k=ck, cross_v=cv), enc_out
+
+
+def decode_step(params, cfg: EncDecConfig, cache, tokens, pos):
+    """One decoder token against self ring cache + static cross KV."""
+    B = tokens.shape[0]
+    spec = cfg.attn_spec(causal=True)
+    x = params["embed"][tokens][:, None, :]
+    # position offset via sinusoid at pos (per batch element)
+    posenc = jax.vmap(
+        lambda p: sinusoid_positions(1, cfg.d_model, offset=p)[0])(pos)
+    x = x + posenc[:, None, :].astype(cfg.dtype)
+    # whisper has no RoPE (theta=0 sentinel); real positions still drive the
+    # ring-buffer slot and causal mask.
+    nospec = dataclasses.replace(spec, rope_theta=0.0)
+
+    def body(x, scanned):
+        layer, lcache = scanned
+        h = nn.layernorm(layer["self"]["ln"], x)
+        y, self2 = nn.attn_decode_step(layer["self"]["attn"], h,
+                                       lcache["selfc"], pos, nospec)
+        x = x + y
+        x = _cross_attend(layer["cross"], x, lcache["ck"], lcache["cv"],
+                          spec)
+        h = nn.layernorm(layer["ln_mlp"], x)
+        x = x + nn.gelu_mlp(layer["mlp"], h)
+        return x, self2
+
+    scanned = (params["dec_layers"],
+               {"selfc": cache["self"], "ck": cache["cross_k"],
+                "cv": cache["cross_v"]})
+    x, self_caches = runconfig.scan(body, x, scanned)
+    x = nn.layernorm(params["ln_dec"], x)
+    logits = x[:, 0, :] @ params["embed"].T
+    return logits, dict(cache, self=self_caches)

@@ -1,0 +1,184 @@
+"""Zamba2 — Mamba2 backbone with a periodically-applied *shared* attention
+block (arXiv:2411.15242).
+
+Assigned arch: zamba2-7b (81 blocks, d_model=3584, 32H MHA, d_ff=14336,
+vocab=32000, ssm_state=64). Every ``attn_every``-th block first applies the
+shared transformer block (one set of weights reused at every application,
+Zamba's parameter-efficiency trick), then its own Mamba2 block.
+
+Decode state: O(1) Mamba2 state per block + one KV ring cache per shared-
+attention *application* (13 of them at L=81, every=6). The SSM state keeps
+``long_500k`` runnable (DESIGN §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models import runconfig
+from repro.models import ssm
+from repro.models.layers import AttnSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    ssm_state: int = 64
+    attn_every: int = 6
+    rope_theta: float = 10000.0
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def num_attn_apps(self) -> int:
+        return len([i for i in range(self.num_layers)
+                    if i % self.attn_every == self.attn_every - 1])
+
+    def attn_spec(self) -> AttnSpec:
+        return AttnSpec(num_heads=self.num_heads,
+                        num_kv_heads=self.num_kv_heads,
+                        head_dim=self.d_model // self.num_heads,
+                        causal=True, rope_theta=self.rope_theta)
+
+    def mamba_spec(self) -> ssm.Mamba2Spec:
+        return ssm.Mamba2Spec(d_model=self.d_model, d_state=self.ssm_state,
+                              dtype=self.dtype)
+
+    def param_count(self) -> int:
+        m = ssm.mamba2_param_count(self.mamba_spec())
+        d, hd = self.d_model, self.d_model // self.num_heads
+        shared_attn = d * hd * (self.num_heads * 2 + self.num_kv_heads * 2)
+        shared = shared_attn + 3 * d * self.d_ff + 2 * d
+        return (self.num_layers * (m + d) + shared
+                + 2 * self.vocab * d + d)
+
+    active_param_count = param_count
+
+
+def init(key, cfg: HybridConfig):
+    k_embed, k_layers, k_shared, k_head = jax.random.split(key, 4)
+    mspec = cfg.mamba_spec()
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+
+    def one_layer(k):
+        return {"ln": nn.rmsnorm_init(cfg.d_model, cfg.dtype),
+                "block": ssm.mamba2_init(k, mspec)}
+
+    ks = jax.random.split(k_shared, 2)
+    shared = {
+        "ln1": nn.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": nn.attn_init(ks[0], cfg.d_model, cfg.attn_spec(), cfg.dtype),
+        "ln2": nn.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": nn.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+    return {
+        "embed": nn.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtype),
+        "layers": jax.vmap(one_layer)(layer_keys),
+        "shared": shared,
+        "ln_f": nn.rmsnorm_init(cfg.d_model, cfg.dtype),
+        "head": nn.dense_init(k_head, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+
+
+def _apply_shared(shared, x, spec: AttnSpec, positions):
+    h = nn.rmsnorm(shared["ln1"], x)
+    x = x + nn.attn_apply(shared["attn"], h, spec, positions)
+    h = nn.rmsnorm(shared["ln2"], x)
+    return x + nn.swiglu(shared["mlp"], h)
+
+
+def forward(params, cfg: HybridConfig, tokens):
+    B, S = tokens.shape
+    x = params["embed"][tokens]
+    spec = cfg.attn_spec()
+    mspec = cfg.mamba_spec()
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    shared = params["shared"]
+
+    def body(x, scanned):
+        idx, layer = scanned
+        x = runconfig.constrain(x, ("dp", None, None))
+        is_attn = (idx % cfg.attn_every) == cfg.attn_every - 1
+        x = jax.lax.cond(is_attn,
+                         lambda v: _apply_shared(shared, v, spec, positions),
+                         lambda v: v, x)
+        h = nn.rmsnorm(layer["ln"], x)
+        y, _ = ssm.mamba2_apply(layer["block"], h, mspec)
+        return x + y, jnp.float32(0.0)
+
+    idxs = jnp.arange(cfg.num_layers)
+    x, _ = runconfig.scan(body, x, (idxs, params["layers"]))
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = runconfig.constrain(x @ params["head"], ("dp", None, "tp"))
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, cfg: HybridConfig, batch, **_):
+    logits, aux = forward(params, cfg, batch["tokens"])
+    return nn.cross_entropy(logits, batch["labels"]), {"aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: HybridConfig, batch: int, cache_len: int):
+    mspec = cfg.mamba_spec()
+    spec = cfg.attn_spec()
+    L, A = cfg.num_layers, cfg.num_attn_apps
+
+    def one_mamba(_):
+        return ssm.mamba2_cache_init(mspec, batch)
+
+    def one_attn(_):
+        return nn.attn_cache_init(batch, cache_len, spec, cfg.dtype)
+
+    return {
+        "mamba": jax.vmap(one_mamba)(jnp.arange(L)),
+        "attn": jax.vmap(one_attn)(jnp.arange(A)),
+    }
+
+
+def decode_step(params, cfg: HybridConfig, cache, tokens, pos):
+    B = tokens.shape[0]
+    spec = cfg.attn_spec()
+    mspec = cfg.mamba_spec()
+    shared = params["shared"]
+    x0 = params["embed"][tokens][:, None, :]
+
+    def body(carry, scanned):
+        x, acaches = carry
+        idx, layer, mcache = scanned
+        app = idx // cfg.attn_every
+        is_attn = (idx % cfg.attn_every) == cfg.attn_every - 1
+        lc = jax.tree.map(lambda c: c[app], acaches)
+
+        def with_attn(op):
+            x, lc = op
+            h = nn.rmsnorm(shared["ln1"], x)
+            y, lc2 = nn.attn_decode_step(shared["attn"], h, lc, pos, spec)
+            x = x + y
+            h = nn.rmsnorm(shared["ln2"], x)
+            return x + nn.swiglu(shared["mlp"], h), lc2
+
+        x, lc = jax.lax.cond(is_attn, with_attn, lambda op: op, (x, lc))
+        acaches = jax.tree.map(lambda c, n: c.at[app].set(n), acaches, lc)
+        h = nn.rmsnorm(layer["ln"], x)
+        y, mcache2 = ssm.mamba2_apply(layer["block"], h, mspec, mcache)
+        return (x + y, acaches), mcache2
+
+    idxs = jnp.arange(cfg.num_layers)
+    (x, attn_caches), mamba_caches = runconfig.scan(
+        body, (x0, cache["attn"]), (idxs, params["layers"], cache["mamba"]))
+    x = nn.rmsnorm(params["ln_f"], x)
+    logits = x[:, 0, :] @ params["head"]
+    return logits, {"mamba": mamba_caches, "attn": attn_caches}

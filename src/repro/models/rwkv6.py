@@ -1,0 +1,219 @@
+"""RWKV6 "Finch" — attention-free LM with data-dependent decay (arXiv:2404.05892).
+
+Assigned arch: rwkv6-7b (32L, d_model=4096, d_ff=14336, vocab=65536).
+
+Per layer: a *time-mix* block (token-shift lerps for r/k/v/w/g, LoRA'd
+data-dependent decay w_t, per-head WKV state S ∈ R^{hs×hs} updated as
+S ← diag(w_t)·S + kᵗv with bonus u on the current token) and a *channel-mix*
+block (token-shifted squared-ReLU MLP).
+
+Decode is O(1) state per layer — the arch family that makes ``long_500k``
+runnable (DESIGN §6). The WKV time scan is also implemented as a Pallas
+kernel (``kernels/rwkv6_scan.py``); this module is its pure-jnp oracle.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+from repro.models import runconfig
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKVConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    head_size: int = 64
+    decay_lora: int = 64
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_model // self.head_size
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        time_mix = 5 * d * d + 5 * d + d + 2 * self.decay_lora * d + d
+        chan_mix = d * f + f * d + d * d + 2 * d
+        per_layer = time_mix + chan_mix + 4 * d
+        return self.num_layers * per_layer + 2 * self.vocab * d + 2 * d
+
+    active_param_count = param_count
+
+
+def _layer_init(key, cfg: RWKVConfig):
+    d, H, hs, r = cfg.d_model, cfg.num_heads, cfg.head_size, cfg.decay_lora
+    ks = jax.random.split(key, 10)
+    dt = cfg.dtype
+    return {
+        "ln1": nn.layernorm_init(d, dt),
+        "tm": {
+            # token-shift interpolation weights for r/k/v/w/g
+            "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)
+                   ).astype(dt),
+            "w0": jnp.full((d,), -6.0, jnp.float32),     # decay bias (slow)
+            "w_a": nn.dense_init(ks[1], d, r, dt),       # decay LoRA
+            "w_b": nn.dense_init(ks[2], r, d, dt),
+            "wr": nn.dense_init(ks[3], d, d, dt),
+            "wk": nn.dense_init(ks[4], d, d, dt),
+            "wv": nn.dense_init(ks[5], d, d, dt),
+            "wg": nn.dense_init(ks[6], d, d, dt),
+            "wo": nn.dense_init(ks[7], d, d, dt),
+            "u": (0.5 * jax.random.normal(ks[8], (H, hs), jnp.float32)
+                  ).astype(jnp.float32),                 # per-head bonus
+        },
+        "ln2": nn.layernorm_init(d, dt),
+        "cm": {
+            "mu_k": jnp.full((d,), 0.5, dt),
+            "mu_r": jnp.full((d,), 0.5, dt),
+            "wk": nn.dense_init(ks[9], d, cfg.d_ff, dt),
+            "wv": nn.dense_init(jax.random.fold_in(ks[9], 1), cfg.d_ff, d,
+                                dt),
+            "wr": nn.dense_init(jax.random.fold_in(ks[9], 2), d, d, dt),
+        },
+    }
+
+
+def init(key, cfg: RWKVConfig):
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    return {
+        "embed": nn.embed_init(k_embed, cfg.vocab, cfg.d_model, cfg.dtype),
+        "ln_in": nn.layernorm_init(cfg.d_model, cfg.dtype),
+        "layers": jax.vmap(lambda k: _layer_init(k, cfg))(layer_keys),
+        "ln_f": nn.layernorm_init(cfg.d_model, cfg.dtype),
+        "head": nn.dense_init(k_head, cfg.d_model, cfg.vocab, cfg.dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# WKV scan (pure-jnp oracle for kernels/rwkv6_scan.py)
+# ---------------------------------------------------------------------------
+
+def wkv_scan(r, k, v, w, u, state=None):
+    """r,k,v,w: (B, S, H, hs) f32 (w in (0,1)); u: (H, hs).
+
+    Returns (out (B,S,H,hs), final state (B,H,hs,hs)). State S[i,j]
+    accumulates k[i]·v[j]; out_t[j] = Σ_i r_t[i] (S[i,j] + u[i] k_t[i] v_t[j]).
+    """
+    B, S, H, hs = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, hs, hs), jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp       # (B, H, hs)
+        kv = k_t[..., :, None] * v_t[..., None, :]       # (B,H,hs,hs)
+        out = jnp.einsum("bhi,bhij->bhj", r_t, s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    seq = jnp.moveaxis(jnp.stack([r, k, v, w]), 2, 0)    # (S, 4, B, H, hs)
+    state, outs = jax.lax.scan(
+        lambda s, x: step(s, (x[0], x[1], x[2], x[3])), state, seq)
+    return jnp.moveaxis(outs, 0, 1), state               # (B,S,H,hs)
+
+
+def _token_shift(x, last=None):
+    """x_{t-1} with x_{-1} = last (or 0)."""
+    first = jnp.zeros_like(x[:, :1]) if last is None else last[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def _time_mix(tm, x, cfg: RWKVConfig, shifted, state):
+    B, S, d = x.shape
+    H, hs = cfg.num_heads, cfg.head_size
+    delta = shifted - x
+    mu = tm["mu"].astype(x.dtype)
+    xr, xk, xv, xw, xg = (x + delta * mu[i] for i in range(5))
+    r = (xr @ tm["wr"]).reshape(B, S, H, hs).astype(jnp.float32)
+    k = (xk @ tm["wk"]).reshape(B, S, H, hs).astype(jnp.float32)
+    v = (xv @ tm["wv"]).reshape(B, S, H, hs).astype(jnp.float32)
+    g = jax.nn.silu((xg @ tm["wg"]).astype(jnp.float32))
+    # data-dependent decay (LoRA): w in (0,1), near 1 for w0 very negative
+    dd = (xw @ tm["w_a"]) @ tm["w_b"]
+    w = jnp.exp(-jnp.exp(tm["w0"].astype(jnp.float32)
+                         + dd.astype(jnp.float32)))
+    w = w.reshape(B, S, H, hs)
+    out, new_state = wkv_scan(r, k, v, w, tm["u"], state)
+    out = (out.reshape(B, S, d) * g).astype(x.dtype)
+    return out @ tm["wo"], new_state
+
+
+def _channel_mix(cm, x, shifted):
+    delta = shifted - x
+    xk = x + delta * cm["mu_k"]
+    xr = x + delta * cm["mu_r"]
+    k = jnp.square(jax.nn.relu((xk @ cm["wk"]).astype(jnp.float32)))
+    r = jax.nn.sigmoid((xr @ cm["wr"]).astype(jnp.float32))
+    return (r * (k.astype(x.dtype) @ cm["wv"]).astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def forward(params, cfg: RWKVConfig, tokens):
+    """tokens: (B, S) -> logits (B, S, V)."""
+    B, S = tokens.shape
+    x = nn.layernorm(params["ln_in"], params["embed"][tokens])
+
+    def body(x, layer):
+        x = runconfig.constrain(x, ("dp", None, None))
+        h = nn.layernorm(layer["ln1"], x)
+        y, _ = _time_mix(layer["tm"], h, cfg, _token_shift(h), None)
+        x = x + y
+        h = nn.layernorm(layer["ln2"], x)
+        x = x + _channel_mix(layer["cm"], h, _token_shift(h))
+        return x, jnp.float32(0.0)
+
+    x, _ = runconfig.scan(body, x, params["layers"])
+    x = nn.layernorm(params["ln_f"], x)
+    logits = runconfig.constrain(x @ params["head"], ("dp", None, "tp"))
+    return logits, jnp.float32(0.0)
+
+
+def loss_fn(params, cfg: RWKVConfig, batch, **_):
+    logits, aux = forward(params, cfg, batch["tokens"])
+    return nn.cross_entropy(logits, batch["labels"]), {"aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# decode — O(1) state per layer
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: RWKVConfig, batch: int, cache_len: int = 0):
+    """State: per-layer (wkv state, tm shift token, cm shift token)."""
+    H, hs, d = cfg.num_heads, cfg.head_size, cfg.d_model
+    L = cfg.num_layers
+    return {
+        "wkv": jnp.zeros((L, batch, H, hs, hs), jnp.float32),
+        "tm_last": jnp.zeros((L, batch, d), cfg.dtype),
+        "cm_last": jnp.zeros((L, batch, d), cfg.dtype),
+    }
+
+
+def decode_step(params, cfg: RWKVConfig, cache, tokens, pos=None):
+    B = tokens.shape[0]
+    x = nn.layernorm(params["ln_in"], params["embed"][tokens])[:, None, :]
+
+    def body(x, scanned):
+        layer, wkv_s, tm_last, cm_last = scanned
+        h = nn.layernorm(layer["ln1"], x)
+        y, new_wkv = _time_mix(layer["tm"], h, cfg,
+                               tm_last[:, None, :].astype(h.dtype), wkv_s)
+        x = x + y
+        h2 = nn.layernorm(layer["ln2"], x)
+        x = x + _channel_mix(layer["cm"], h2,
+                             cm_last[:, None, :].astype(h2.dtype))
+        return x, (new_wkv, h[:, 0], h2[:, 0])
+
+    x, (wkv, tm_last, cm_last) = runconfig.scan(
+        body, x, (params["layers"], cache["wkv"], cache["tm_last"],
+                  cache["cm_last"]))
+    x = nn.layernorm(params["ln_f"], x)
+    logits = x[:, 0, :] @ params["head"]
+    return logits, {"wkv": wkv, "tm_last": tm_last, "cm_last": cm_last}

@@ -1,0 +1,160 @@
+"""Mamba2 (SSD) block — the state-space substrate for zamba2-7b.
+
+Simplified-but-faithful Mamba2: per-head scalar decay A, input-dependent
+(dt, B, C) with softplus-discretized dt, short causal conv on the input
+stream, SiLU gating, grouped B/C. State h ∈ R^{heads × headdim × N}.
+
+The time recurrence runs as a ``lax.scan`` over the sequence for training
+and as an O(1) state update at decode — the property that makes the hybrid
+arch runnable at ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as nn
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Spec:
+    d_model: int
+    d_state: int = 64          # N
+    head_dim: int = 64         # P
+    expand: int = 2
+    conv_width: int = 4
+    n_groups: int = 1
+    dtype: jnp.dtype = jnp.bfloat16
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_dim(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+
+def mamba2_init(key, spec: Mamba2Spec):
+    ks = jax.random.split(key, 4)
+    d, di, H = spec.d_model, spec.d_inner, spec.num_heads
+    proj_out = 2 * di + 2 * spec.n_groups * spec.d_state + H
+    return {
+        "in_proj": nn.dense_init(ks[0], d, proj_out, spec.dtype),
+        "conv_w": (0.1 * jax.random.normal(
+            ks[1], (spec.conv_width, spec.conv_dim), jnp.float32)
+            ).astype(spec.dtype),
+        "conv_b": jnp.zeros((spec.conv_dim,), spec.dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": nn.rmsnorm_init(di, spec.dtype),
+        "out_proj": nn.dense_init(ks[2], di, d, spec.dtype),
+    }
+
+
+def mamba2_param_count(spec: Mamba2Spec) -> int:
+    d, di, H = spec.d_model, spec.d_inner, spec.num_heads
+    proj_out = 2 * di + 2 * spec.n_groups * spec.d_state + H
+    return (d * proj_out + spec.conv_width * spec.conv_dim + spec.conv_dim
+            + 3 * H + di + di * d)
+
+
+def _causal_conv(x, w, b, last_window=None):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C). last_window: (B, K-1, C)."""
+    K = w.shape[0]
+    if last_window is None:
+        pad = jnp.zeros_like(x[:, : K - 1])
+    else:
+        pad = last_window.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    out = sum(xp[:, i: i + x.shape[1]] * w[i] for i in range(K))
+    return out + b, xp[:, -(K - 1):]
+
+
+def _split_proj(spec: Mamba2Spec, proj):
+    di, G, N, H = (spec.d_inner, spec.n_groups, spec.d_state,
+                   spec.num_heads)
+    z = proj[..., :di]
+    xbc = proj[..., di: di + di + 2 * G * N]
+    dt = proj[..., di + di + 2 * G * N:]
+    return z, xbc, dt
+
+
+def _ssd_scan(spec: Mamba2Spec, xh, Bmat, Cmat, dt, A_log, D, state=None):
+    """The SSD recurrence.
+
+    xh: (B, S, H, P); Bmat/Cmat: (B, S, G, N); dt: (B, S, H) post-softplus.
+    h ← exp(dt·A)·h + dt·(x ⊗ B);  y = h·C + D·x.
+    """
+    Bsz, S, H, P = xh.shape
+    G = Bmat.shape[2]
+    rep = H // G
+    A = -jnp.exp(A_log)                            # (H,) negative
+
+    if state is None:
+        state = jnp.zeros((Bsz, H, P, spec.d_state), jnp.float32)
+
+    def step(h, inp):
+        x_t, B_t, C_t, dt_t = inp                  # (B,H,P),(B,G,N),(B,G,N),(B,H)
+        decay = jnp.exp(dt_t * A)                  # (B,H)
+        Bh = jnp.repeat(B_t, rep, axis=1)          # (B,H,N)
+        Ch = jnp.repeat(C_t, rep, axis=1)
+        upd = (dt_t[..., None, None] * x_t[..., :, None]
+               * Bh[..., None, :])                 # (B,H,P,N)
+        h = decay[..., None, None] * h + upd
+        y = jnp.einsum("bhpn,bhn->bhp", h, Ch) + D[None, :, None] * x_t
+        return h, y
+
+    seq = (jnp.moveaxis(xh.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Bmat.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(Cmat.astype(jnp.float32), 1, 0),
+           jnp.moveaxis(dt, 1, 0))
+    state, ys = jax.lax.scan(lambda h, t: step(h, t), state,
+                             seq)
+    return jnp.moveaxis(ys, 0, 1), state           # (B,S,H,P)
+
+
+def mamba2_apply(params, x, spec: Mamba2Spec, cache=None):
+    """x: (B, S, D) -> (B, S, D). cache = {"conv": (B,K-1,C), "ssm": (B,H,P,N)}
+    for incremental decode (S=1); None for full-sequence training."""
+    B, S, _ = x.shape
+    H, P, G, N = spec.num_heads, spec.head_dim, spec.n_groups, spec.d_state
+    proj = x @ params["in_proj"]
+    z, xbc, dt_raw = _split_proj(spec, proj)
+    conv_cache = None if cache is None else cache["conv"]
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                                 conv_cache)
+    xbc = jax.nn.silu(xbc.astype(jnp.float32)).astype(x.dtype)
+    xh = xbc[..., : spec.d_inner].reshape(B, S, H, P)
+    Bmat = xbc[..., spec.d_inner: spec.d_inner + G * N].reshape(B, S, G, N)
+    Cmat = xbc[..., spec.d_inner + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])      # (B,S,H)
+    ssm_cache = None if cache is None else cache["ssm"]
+    y, new_ssm = _ssd_scan(spec, xh, Bmat, Cmat, dt, params["A_log"],
+                           params["D"], ssm_cache)
+    y = y.reshape(B, S, spec.d_inner).astype(x.dtype)
+    y = nn.rmsnorm(params["norm"], y)
+    y = (y.astype(jnp.float32)
+         * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ params["out_proj"]
+    if cache is None:
+        return out, None
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def mamba2_cache_init(spec: Mamba2Spec, batch: int):
+    return {
+        "conv": jnp.zeros((batch, spec.conv_width - 1, spec.conv_dim),
+                          spec.dtype),
+        "ssm": jnp.zeros((batch, spec.num_heads, spec.head_dim,
+                          spec.d_state), jnp.float32),
+    }

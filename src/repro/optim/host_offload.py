@@ -1,0 +1,107 @@
+"""Host-offloaded AdamW — optimizer states in the capacity tier.
+
+The paper's headline capacity case runs a 671B model out of CXL memory
+(§6.4). The TPU-native equivalent (DESIGN §2): Adam moments (f32 m and v =
+8 bytes/param, the *largest* training state) live in host memory — the "CXL
+pool" — and stream through the full-duplex PCIe link every step:
+
+    for each chunk: H2D(m,v chunk k+1)  ||  D2H(updated m,v chunk k)
+
+The duplex plan keeps both link directions busy (plan_state_stream); the
+phase-separated baseline ("read all moments, update, write all back") takes
+~1.7× longer on the modelled link (Obs 1's balanced-mix benefit — this mix
+is exactly 50/50 by construction).
+
+On this CPU-only container "host memory" is plain numpy outside jit and the
+"device" is the JAX CPU backend; the chunked streamed update is executed
+for real (correctness) while link timing comes from the channel model
+(reported by ``last_transfer_report``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core.offload import DuplexOffloadEngine
+from repro.optim.adamw import AdamWConfig, clip_by_global_norm, \
+    cosine_schedule
+
+
+@dataclasses.dataclass
+class HostOffloadAdamW:
+    """AdamW with m/v resident in the host pool, streamed per step."""
+
+    cfg: AdamWConfig
+    chunk_bytes: float = 64 * 2 ** 20     # 64 MB streaming granularity
+    engine: DuplexOffloadEngine = dataclasses.field(
+        default_factory=lambda: DuplexOffloadEngine(
+            link=channel_lib.PCIE_HOST))
+
+    def init(self, params) -> dict:
+        host_zeros = lambda p: np.zeros(p.shape, np.float32)
+        self._m = jax.tree.map(host_zeros, params)
+        self._v = jax.tree.map(host_zeros, params)
+        self.last_transfer_report: dict = {}
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def state_bytes(self) -> float:
+        return sum(x.nbytes for x in jax.tree.leaves(self._m)) * 2.0
+
+    # -- the jitted per-leaf update kernel -----------------------------------
+    @staticmethod
+    @jax.jit
+    def _leaf_update(p, g, m, v, lr, bc1, bc2, b1, b2, eps, wd):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m + (1.0 - b1) * gf
+        v2 = b2 * v + (1.0 - b2) * jnp.square(gf)
+        upd = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+        pf = p.astype(jnp.float32)
+        return (pf - lr * (upd + wd * pf)).astype(p.dtype), m2, v2
+
+    def update(self, params, grads, state):
+        """Streamed update: moments page in/out chunk-by-chunk (duplex)."""
+        cfg = self.cfg
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        step = state["step"] + 1
+        lr = cosine_schedule(cfg, step)
+        t = jnp.asarray(step, jnp.float32)
+        bc1, bc2 = 1.0 - cfg.b1 ** t, 1.0 - cfg.b2 ** t
+
+        p_leaves, treedef = jax.tree.flatten(params)
+        g_leaves = jax.tree.leaves(grads)
+        m_leaves = jax.tree.leaves(self._m)
+        v_leaves = jax.tree.leaves(self._v)
+
+        new_p = []
+        moved = 0.0
+        for p, g, m, v in zip(p_leaves, g_leaves, m_leaves, v_leaves):
+            # H2D page-in of this chunk's moments
+            m_dev = jnp.asarray(m)
+            v_dev = jnp.asarray(v)
+            p2, m2, v2 = self._leaf_update(p, g, m_dev, v_dev, lr, bc1, bc2,
+                                           cfg.b1, cfg.b2, cfg.eps,
+                                           cfg.weight_decay)
+            # D2H writeback of updated moments (in place in the host pool)
+            m[...] = np.asarray(m2)
+            v[...] = np.asarray(v2)
+            new_p.append(p2)
+            moved += m.nbytes + v.nbytes
+
+        # modelled duplex link occupancy for this step's moment traffic
+        # (chunk adapts down so even small states pipeline >= 16 deep)
+        chunk = min(self.chunk_bytes, max(moved / 16.0, 1 << 16))
+        duplex, serial = self.engine.plan_state_stream(
+            nbytes=moved, chunk_bytes=chunk)
+        self.last_transfer_report = {
+            "moment_bytes": moved,
+            "duplex_us": duplex.modelled_time_us(),
+            "serial_us": serial.modelled_time_us(),
+            "duplex_speedup": self.engine.speedup(duplex, serial),
+        }
+        return (jax.tree.unflatten(treedef, new_p), {"step": step},
+                {"lr": lr, "grad_norm": gnorm})

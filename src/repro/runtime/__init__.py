@@ -1,0 +1,2 @@
+from repro.runtime.train import Trainer, TrainConfig, FaultInjector
+from repro.runtime.serve import DecodeServer, OffloadedKVCache, ServeConfig

@@ -1,0 +1,222 @@
+"""Training runtime: jitted step, checkpoint/restart, fault & straggler
+handling, host-offloaded optimizer integration.
+
+Fault-tolerance posture for 1000+ nodes (DESIGN §5), realized with real
+interfaces and CPU-scale simulation hooks:
+
+  * **checkpoint/restart** — async sharded checkpoints every
+    ``ckpt_every`` steps; ``Trainer.restore()`` resumes params, optimizer
+    and the *data cursor* (stateless pipeline addressing);
+  * **step retry** — a transient fault (preempted host, flaky link) raises
+    from the step function; the loop retries the same step with the same
+    batch (deterministic data makes this loss-free), then falls back to the
+    last checkpoint after ``max_retries``;
+  * **straggler mitigation** — per-step wall times feed an EWMA; steps
+    slower than ``straggler_factor ×`` the EWMA are counted and surfaced so
+    the deployment layer can quarantine the slow host. The detector is the
+    same sliding-window machinery as the paper's Algorithm 1 phase 2
+    (oversubscription ⇒ intervention);
+  * **elastic resume** — restart with a different dp_size re-addresses the
+    batch stream with zero loss/duplication (tested in
+    tests/test_runtime.py).
+
+Distributed-optimization tricks: grads are cast to bf16 before the
+(sharding-induced) all-reduce — 2× collective-byte compression; the
+optimizer can live in the host pool (HostOffloadAdamW) with duplex-planned
+moment streaming.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticLMData, device_batch
+from repro.models.registry import ModelAPI
+from repro.optim import AdamWConfig, HostOffloadAdamW, adamw_init, \
+    adamw_update
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    steps: int = 20
+    seed: int = 0
+    ckpt_every: int = 10
+    ckpt_dir: str | None = None
+    max_retries: int = 2
+    straggler_factor: float = 3.0
+    optimizer_placement: str = "device"    # "device" | "host"
+    optim: AdamWConfig = AdamWConfig()
+    dp_rank: int = 0
+    dp_size: int = 1
+
+
+class FaultInjector:
+    """Deterministic fault/straggler injection for tests and drills."""
+
+    def __init__(self, fail_steps: tuple[int, ...] = (),
+                 slow_steps: tuple[int, ...] = (), slow_s: float = 0.05,
+                 max_failures_per_step: int = 1):
+        self.fail_steps = set(fail_steps)
+        self.slow_steps = set(slow_steps)
+        self.slow_s = slow_s
+        self.max_failures = max_failures_per_step
+        self.failures: dict[int, int] = {}
+
+    def before_step(self, step: int):
+        if step in self.slow_steps:
+            time.sleep(self.slow_s)
+        count = self.failures.get(step, 0)
+        if step in self.fail_steps and count < self.max_failures:
+            self.failures[step] = count + 1
+            raise RuntimeError(f"injected transient fault at step {step}")
+
+
+class Trainer:
+    def __init__(self, api: ModelAPI, cfg: TrainConfig,
+                 extras_fn: Callable[[], dict] | None = None,
+                 fault_injector: FaultInjector | None = None):
+        self.api = api
+        self.cfg = cfg
+        self.extras_fn = extras_fn or (lambda: {})
+        self.faults = fault_injector
+        self.data_cfg = DataConfig(vocab=api.cfg.vocab, seq_len=cfg.seq_len,
+                                   global_batch=cfg.global_batch,
+                                   seed=cfg.seed)
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir)
+                     if cfg.ckpt_dir else None)
+        self.host_opt = (HostOffloadAdamW(cfg.optim)
+                         if cfg.optimizer_placement == "host" else None)
+        self.step_times: list[float] = []
+        self.straggler_steps: list[int] = []
+        self.retried_steps: list[int] = []
+        self._ewma: float | None = None
+        self._build()
+
+    # -- step functions -------------------------------------------------------
+    def _build(self):
+        api, optim = self.api, self.cfg.optim
+
+        def grads_fn(params, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                api.loss_fn, has_aux=True)(params, batch)
+            # gradient compression: bf16 before the DP all-reduce
+            grads = jax.tree.map(
+                lambda g: g.astype(optim.grad_dtype), grads)
+            return loss, metrics, grads
+
+        if self.host_opt is None:
+            def full_step(params, opt_state, batch):
+                loss, metrics, grads = grads_fn(params, batch)
+                params, opt_state, om = adamw_update(optim, params, grads,
+                                                     opt_state)
+                return params, opt_state, dict(metrics, loss=loss, **om)
+
+            self._train_step = jax.jit(full_step, donate_argnums=(0, 1))
+            self._grads_step = None
+        else:
+            # host optimizer: jit the fwd+bwd; update streams on the host.
+            self._grads_step = jax.jit(grads_fn)
+            self._train_step = None
+
+    def init_state(self, key=None):
+        key = jax.random.PRNGKey(self.cfg.seed) if key is None else key
+        params = self.api.init(key)
+        if self.host_opt is not None:
+            opt_state = self.host_opt.init(params)
+        else:
+            opt_state = adamw_init(params)
+        return params, opt_state
+
+    def _one_step(self, params, opt_state, batch):
+        if self.host_opt is None:
+            return self._train_step(params, opt_state, batch)
+        loss, metrics, grads = self._grads_step(params, batch)
+        params, opt_state, om = self.host_opt.update(params, grads,
+                                                     opt_state)
+        return params, opt_state, dict(metrics, loss=loss, **om)
+
+    # -- checkpoint glue -------------------------------------------------------
+    def _save(self, step, params, opt_state, block=False):
+        if self.ckpt is None:
+            return
+        tree = {"params": params, "opt": opt_state}
+        self.ckpt.save(step, tree,
+                       metadata={"data_step": step,
+                                 "dp_size": self.cfg.dp_size},
+                       block=block)
+
+    def restore(self):
+        """Resume from the newest valid checkpoint; returns (state, step)."""
+        tree, manifest = self.ckpt.restore()
+        params = jax.tree.map(jnp.asarray, tree["params"])
+        opt = jax.tree.map(jnp.asarray, tree["opt"])
+        if self.host_opt is not None:
+            # moments were checkpointed from the host pool; re-pin them.
+            self.host_opt._m = jax.tree.map(np.asarray, tree["opt"].get(
+                "host_m", self.host_opt._m))
+            self.host_opt._v = jax.tree.map(np.asarray, tree["opt"].get(
+                "host_v", self.host_opt._v))
+        return (params, opt), manifest["metadata"]["data_step"]
+
+    # -- the loop --------------------------------------------------------------
+    def run(self, params=None, opt_state=None, start_step: int = 0):
+        if params is None:
+            params, opt_state = self.init_state()
+        data = SyntheticLMData(self.data_cfg, self.cfg.dp_rank,
+                               self.cfg.dp_size, start_step)
+        history = []
+        step = start_step
+        while step < self.cfg.steps:
+            raw = data.peek(step)
+            batch = device_batch(raw, self.extras_fn())
+            attempts = 0
+            while True:
+                t0 = time.monotonic()
+                try:
+                    if self.faults is not None:
+                        self.faults.before_step(step)
+                    params, opt_state, metrics = self._one_step(
+                        params, opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    break
+                except RuntimeError:
+                    attempts += 1
+                    self.retried_steps.append(step)
+                    if attempts > self.cfg.max_retries:
+                        # unrecoverable: roll back to last checkpoint
+                        (params, opt_state), step = self.restore()
+                        data.step = step
+                        break
+            dt = time.monotonic() - t0
+            self._track_straggler(step, dt)
+            history.append({"step": step,
+                            "loss": float(metrics["loss"]),
+                            "sec": dt})
+            step += 1
+            if self.ckpt and step % self.cfg.ckpt_every == 0:
+                self._save(step, params, opt_state)
+        if self.ckpt:
+            self._save(self.cfg.steps, params, opt_state, block=True)
+        return params, opt_state, history
+
+    def _track_straggler(self, step: int, dt: float):
+        """Sliding-window median straggler detector (Alg 1 phase 2 shape).
+
+        The median is robust to the compile-heavy first step that would
+        poison an EWMA baseline."""
+        import statistics
+        window = self.step_times[-8:]
+        self.step_times.append(dt)
+        if len(window) >= 3:
+            med = statistics.median(window)
+            if dt > self.cfg.straggler_factor * med:
+                self.straggler_steps.append(step)

@@ -1,0 +1,18 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+# make the top-level `benchmarks` package importable under
+# `PYTHONPATH=src pytest tests/`
+sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def to_f32(x):
+    return np.asarray(x, np.float32)

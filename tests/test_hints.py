@@ -1,0 +1,72 @@
+"""Hint tree (cgroup analogue) — inheritance, override, serialization."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.hints import HintTree, MemoryHint, SYSTEM_DEFAULT, \
+    default_serving_hints, default_training_hints
+
+
+class TestInheritance:
+    def test_unset_resolves_to_system_default(self):
+        t = HintTree()
+        h = t.resolve("/anything/nested/deep")
+        assert h.read_fraction == SYSTEM_DEFAULT.read_fraction
+        assert h.duplex_opt_in is True
+
+    def test_child_overrides_parent(self):
+        t = HintTree()
+        t.set("/job", MemoryHint(read_fraction=0.9, priority=2.0))
+        t.set("/job/writer", MemoryHint(read_fraction=0.1))
+        h = t.resolve("/job/writer")
+        assert h.read_fraction == 0.1
+        assert h.priority == 2.0          # inherited from /job
+
+    def test_sibling_isolation(self):
+        t = HintTree()
+        t.set("/job/a", MemoryHint(read_fraction=0.9))
+        assert t.resolve("/job/b").read_fraction == \
+            SYSTEM_DEFAULT.read_fraction
+
+    def test_opt_out_inherits_down(self):
+        t = HintTree()
+        t.set("/serve", MemoryHint(duplex_opt_in=False))
+        assert t.resolve("/serve/prefill/attn").duplex_opt_in is False
+
+    def test_intermediate_scopes_materialized(self):
+        t = HintTree()
+        t.set("/a/b/c", MemoryHint(priority=3.0))
+        assert "/a/b" in list(t.paths())
+
+
+class TestSerialization:
+    def test_roundtrip(self):
+        t = default_training_hints()
+        t2 = HintTree.from_json(t.to_json())
+        for path in t.paths():
+            assert t.resolve(path) == t2.resolve(path)
+
+    @settings(max_examples=20, deadline=None)
+    @given(rf=st.one_of(st.none(), st.floats(0, 1)),
+           pri=st.one_of(st.none(), st.floats(0.1, 10)),
+           opt=st.one_of(st.none(), st.booleans()))
+    def test_roundtrip_property(self, rf, pri, opt):
+        t = HintTree()
+        t.set("/x/y", MemoryHint(read_fraction=rf, priority=pri,
+                                 duplex_opt_in=opt))
+        t2 = HintTree.from_json(t.to_json())
+        assert t2.resolve("/x/y") == t.resolve("/x/y")
+
+
+class TestDefaults:
+    def test_training_defaults(self):
+        t = default_training_hints()
+        assert t.resolve("/train/checkpoint").read_fraction == 0.0
+        assert t.resolve("/train/grads").sequential is True
+
+    def test_serving_defaults_match_paper(self):
+        """§6.4: attention 85% reads, FFN 60/40; prefill opts out."""
+        t = default_serving_hints()
+        assert t.resolve("/serve/attention").read_fraction == 0.85
+        assert t.resolve("/serve/ffn").read_fraction == 0.60
+        assert t.resolve("/serve/prefill").duplex_opt_in is False

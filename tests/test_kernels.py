@@ -1,0 +1,159 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _qkv(B, S, H, KV, hd, dtype):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, H, hd),
+                          jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, KV, hd),
+                          jnp.float32).astype(dtype)
+    return q, k, v
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,S,H,KV,hd", [
+        (2, 256, 4, 2, 64),      # GQA 2:1
+        (1, 256, 4, 4, 128),     # MHA, wide head
+        (2, 128, 8, 1, 64),      # MQA
+        (1, 512, 2, 2, 64),      # long-ish
+    ])
+    def test_causal_sweep(self, B, S, H, KV, hd):
+        q, k, v = _qkv(B, S, H, KV, hd, jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, causal=True)
+        gold = ref.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_dtypes(self, dtype):
+        q, k, v = _qkv(1, 256, 2, 2, 64, dtype)
+        out = ops.flash_attention(q, k, v, causal=True)
+        gold = ref.attention(q, k, v, causal=True)
+        tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32),
+                                   atol=tol, rtol=tol)
+        assert out.dtype == dtype
+
+    @pytest.mark.parametrize("window", [64, 96, 256])
+    def test_sliding_window(self, window):
+        q, k, v = _qkv(1, 256, 2, 2, 64, jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, causal=True, window=window)
+        gold = ref.attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    @pytest.mark.parametrize("prefix", [32, 128])
+    def test_prefix_lm(self, prefix):
+        q, k, v = _qkv(1, 256, 2, 1, 64, jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, causal=True, prefix_len=prefix)
+        gold = ref.attention(q, k, v, causal=True, prefix_len=prefix)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    def test_bidirectional(self):
+        q, k, v = _qkv(1, 128, 2, 2, 64, jnp.bfloat16)
+        out = ops.flash_attention(q, k, v, causal=False)
+        gold = ref.attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(gold, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+    def test_block_sizes(self):
+        q, k, v = _qkv(1, 256, 2, 2, 64, jnp.bfloat16)
+        gold = ref.attention(q, k, v, causal=True)
+        for qb, kb in [(64, 64), (128, 256), (256, 128)]:
+            out = ops.flash_attention(q, k, v, causal=True, q_block=qb,
+                                      kv_block=kb)
+            np.testing.assert_allclose(np.asarray(out, np.float32),
+                                       np.asarray(gold, np.float32),
+                                       atol=3e-2, rtol=3e-2)
+
+
+class TestWKV6:
+    @pytest.mark.parametrize("B,S,H,hs,chunk", [
+        (2, 256, 2, 32, 64),
+        (1, 128, 4, 64, 128),
+        (2, 64, 1, 16, 32),
+        (1, 192, 3, 32, 64),     # chunk not dividing -> full-S chunk
+    ])
+    def test_sweep(self, B, S, H, hs, chunk):
+        r = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, H, hs))
+        k = jax.random.normal(jax.random.fold_in(KEY, 5), (B, S, H, hs))
+        v = jax.random.normal(jax.random.fold_in(KEY, 6), (B, S, H, hs))
+        w = jax.nn.sigmoid(jax.random.normal(
+            jax.random.fold_in(KEY, 7), (B, S, H, hs))) * 0.5 + 0.45
+        u = 0.3 * jax.random.normal(jax.random.fold_in(KEY, 8), (H, hs))
+        if S % chunk:
+            with pytest.raises(ValueError):
+                ops.wkv6(r, k, v, w, u, chunk=chunk)
+            return
+        out = ops.wkv6(r, k, v, w, u, chunk=chunk)
+        gold, _ = ref.wkv6(r, k, v, w, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(gold),
+                                   atol=1e-4, rtol=1e-4)
+
+    def test_state_continuity_across_chunks(self):
+        """Chunked result must equal unchunked (state persists in VMEM)."""
+        B, S, H, hs = 1, 256, 2, 32
+        r, k, v = (jax.random.normal(jax.random.fold_in(KEY, i),
+                                     (B, S, H, hs)) for i in range(3))
+        w = jnp.full((B, S, H, hs), 0.9)
+        u = jnp.zeros((H, hs))
+        a = ops.wkv6(r, k, v, w, u, chunk=32)
+        b = ops.wkv6(r, k, v, w, u, chunk=256)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-4)
+
+
+class TestDuplexStream:
+    @pytest.mark.parametrize("N,T,D", [(4, 64, 128), (2, 32, 256),
+                                       (1, 16, 64)])
+    @pytest.mark.parametrize("fused", [True, False])
+    def test_vs_oracle(self, N, T, D, fused):
+        in_x = jax.random.normal(jax.random.fold_in(KEY, 10), (N, T, D))
+        in_q, in_scale = ref.quantize_int8(in_x)
+        out_x = jax.random.normal(jax.random.fold_in(KEY, 11),
+                                  (N, T, D)).astype(jnp.bfloat16)
+        deq, oq, osc = ops.duplex_kv_stream(in_q, in_scale, out_x,
+                                            fused=fused)
+        gdeq, goq, gosc = ref.duplex_kv_stream(in_q, in_scale, out_x)
+        np.testing.assert_allclose(np.asarray(deq, np.float32),
+                                   np.asarray(gdeq, np.float32))
+        np.testing.assert_allclose(np.asarray(osc), np.asarray(gosc),
+                                   rtol=1e-6)
+        # int8 values may differ by 1 LSB on exact rounding ties
+        assert int(np.max(np.abs(
+            np.asarray(oq, np.int32) - np.asarray(goq, np.int32)))) <= 1
+
+    def test_fused_equals_serial(self):
+        in_x = jax.random.normal(jax.random.fold_in(KEY, 12), (4, 32, 64))
+        in_q, in_scale = ref.quantize_int8(in_x)
+        out_x = jax.random.normal(jax.random.fold_in(KEY, 13),
+                                  (4, 32, 64)).astype(jnp.bfloat16)
+        a = ops.duplex_kv_stream(in_q, in_scale, out_x, fused=True)
+        b = ops.duplex_kv_stream(in_q, in_scale, out_x, fused=False)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_quant_roundtrip_error_bound(self):
+        x = jax.random.normal(jax.random.fold_in(KEY, 14), (2, 16, 128))
+        q, scale = ref.quantize_int8(x)
+        back = ref.dequantize_int8(q, scale, jnp.float32)
+        err = np.max(np.abs(np.asarray(back) - np.asarray(x)))
+        amax = np.max(np.abs(np.asarray(x)))
+        assert err <= amax / 127.0 * 1.01    # half-LSB bound (+bf16 slack)

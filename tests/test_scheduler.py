@@ -1,0 +1,99 @@
+"""Simulator invariants (property-based) + A/B harness behavior."""
+
+import hypothesis.strategies as st
+import jax.numpy as jnp
+from hypothesis import given, settings
+
+from repro.core import channel as ch
+from repro.core import scheduler as sched
+from repro.core.requests import PATTERNS, StreamSpec
+
+
+def _specs(n, gbps, rf, pattern="uniform"):
+    return [StreamSpec(name=f"s{i}", pattern=pattern, offered_gbps=gbps,
+                       read_fraction=rf) for i in range(n)]
+
+
+class TestConservation:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(1, 6),
+        gbps=st.floats(1.0, 50.0),
+        rf=st.floats(0.0, 1.0),
+        policy=st.sampled_from(["cfs", "timeseries", "threshold",
+                                "ddr_batching"]),
+    )
+    def test_served_plus_backlog_equals_offered(self, n, gbps, rf, policy):
+        """Open loop: served + unexecuted == issued (byte conservation)."""
+        specs = _specs(n, gbps, rf)
+        sim = sched.SimConfig(steps=128, closed_loop=False)
+        res = sched.simulate(ch.CXL_512, specs, policy, sim=sim)
+        served = float(jnp.sum(res.moved_read + res.moved_write))
+        offered = n * gbps * 1e3 * sim.steps
+        final_backlog = float(res.backlog_total[-1])
+        assert served <= offered * 1.001
+        assert abs(served + final_backlog - offered) / offered < 0.02
+
+    @settings(max_examples=10, deadline=None)
+    @given(rf=st.floats(0.0, 1.0),
+           policy=st.sampled_from(["cfs", "timeseries"]))
+    def test_utilization_bounded(self, rf, policy):
+        res = sched.simulate(ch.CXL_512, _specs(4, 30.0, rf), policy,
+                             sim=sched.SimConfig(steps=128))
+        assert float(jnp.max(res.utilization)) <= 1.001
+        assert float(jnp.min(res.utilization)) >= 0.0
+
+    @settings(max_examples=6, deadline=None)
+    @given(rf=st.floats(0.1, 0.9))
+    def test_half_duplex_never_moves_both(self, rf):
+        res = sched.simulate(ch.DDR5_LOCAL, _specs(4, 30.0, rf), "cfs",
+                             sim=sched.SimConfig(steps=128,
+                                                 closed_loop=False))
+        both = jnp.logical_and(res.moved_read > 0, res.moved_write > 0)
+        assert not bool(jnp.any(both))
+
+
+class TestThroughputOrdering:
+    def test_offered_below_capacity_is_served(self):
+        """Light load: every policy should keep up."""
+        specs = _specs(4, 2.0, 0.5)
+        for policy in ("cfs", "timeseries", "threshold"):
+            res = sched.simulate(ch.CXL_512, specs, policy,
+                                 sim=sched.SimConfig(steps=512))
+            assert float(res.achieved_gbps()) > 0.9 * 8.0
+
+    def test_duplex_peak_at_balanced_mix(self):
+        """Achieved bandwidth peaks near the channel's optimal mix."""
+        results = {}
+        for rf in (0.0, 0.55, 1.0):
+            res = sched.simulate(ch.CXL_512, _specs(8, 20.0, rf),
+                                 "timeseries",
+                                 sim=sched.SimConfig(steps=512))
+            results[rf] = float(res.achieved_gbps())
+        assert results[0.55] >= results[0.0]
+        assert results[0.55] >= results[1.0] * 0.95
+
+    def test_migration_charged(self):
+        res = sched.simulate(ch.CXL_512,
+                             _specs(8, 20.0, 0.5, pattern="phased"),
+                             "timeseries", sim=sched.SimConfig(steps=256))
+        assert float(jnp.sum(res.migration)) >= 0.0
+
+
+class TestPatterns:
+    def test_all_patterns_generate(self):
+        from repro.core import requests as req
+        for name in PATTERNS:
+            arr = req.generate(
+                [StreamSpec(name="x", pattern=name, offered_gbps=10.0)],
+                steps=64)
+            assert arr.shape == (64, 1, 2)
+            assert float(jnp.min(arr)) >= 0.0
+
+    def test_deterministic(self):
+        from repro.core import requests as req
+        specs = [StreamSpec(name="x", pattern="gaussian",
+                            offered_gbps=10.0)]
+        a = req.generate(specs, 64, seed=7)
+        b = req.generate(specs, 64, seed=7)
+        assert bool(jnp.all(a == b))

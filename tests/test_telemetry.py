@@ -1,0 +1,47 @@
+"""CAX attribution contexts."""
+
+from repro.core.telemetry import CaxRegistry
+
+
+class TestAttribution:
+    def test_ancestor_chain_accumulates(self):
+        reg = CaxRegistry()
+        reg.attribute("/serve/kv/page_in", read_bytes=100.0)
+        reg.attribute("/serve/kv/page_out", write_bytes=40.0)
+        assert reg.get("/serve/kv").read_bytes == 100.0
+        assert reg.get("/serve/kv").write_bytes == 40.0
+        assert reg.get("/serve").total_bytes == 140.0
+        assert reg.get("/").total_bytes == 140.0
+
+    def test_sibling_isolation(self):
+        reg = CaxRegistry()
+        reg.attribute("/a/x", read_bytes=10.0)
+        reg.attribute("/b/y", read_bytes=5.0)
+        assert reg.get("/a").read_bytes == 10.0
+        assert reg.get("/b").read_bytes == 5.0
+
+    def test_read_fraction(self):
+        reg = CaxRegistry()
+        reg.attribute("/j", read_bytes=85.0, write_bytes=15.0)
+        assert abs(reg.get("/j").read_fraction - 0.85) < 1e-9
+
+    def test_types_by_depth(self):
+        reg = CaxRegistry()
+        ctx = reg.context("/job/module/fn")
+        assert reg.get("/job").ctx_type == "job"
+        assert reg.get("/job/module").ctx_type == "module"
+        assert ctx.ctx_type == "function"
+
+    def test_report_renders(self):
+        reg = CaxRegistry()
+        reg.attribute("/train/fwd", read_bytes=1e9, flops=1e12)
+        text = reg.report()
+        assert "/train/fwd" in text
+        assert "1.000" in text
+
+    def test_json_export(self):
+        import json
+        reg = CaxRegistry()
+        reg.attribute("/x", collective_bytes=7.0)
+        data = json.loads(reg.to_json())
+        assert data["/x"]["collective_bytes"] == 7.0
