@@ -12,6 +12,8 @@ import argparse
 import sys
 import traceback
 
+from benchmarks.common import out_dir
+
 MODULES = ("characterization", "microbench", "redis_like",
            "llm_inference", "vectordb", "roofline")
 
@@ -22,8 +24,16 @@ def main() -> int:
                    help="comma-separated subset of: " + ",".join(MODULES))
     args = p.parse_args()
     todo = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in todo if n not in MODULES]
+    if unknown:
+        p.error(f"unknown benchmark modules {unknown}; "
+                f"choose from {','.join(MODULES)}")
 
-    failures = 0
+    # create experiments/bench/ up front so a missing output directory can
+    # never surface as a module failure mid-run.
+    out_dir()
+
+    failed: list[str] = []
     print("name,us_per_call,derived")
     for name in todo:
         try:
@@ -32,10 +42,13 @@ def main() -> int:
             sys.stdout.write(bench.render())
             sys.stdout.flush()
         except Exception:                      # noqa: BLE001
-            failures += 1
+            failed.append(name)
             print(f"{name},0,ERROR")
             traceback.print_exc()
-    return 1 if failures else 0
+    if failed:
+        print(f"benchmark modules failed: {','.join(failed)}",
+              file=sys.stderr)
+    return 1 if failed else 0
 
 
 if __name__ == "__main__":

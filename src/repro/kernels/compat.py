@@ -1,0 +1,13 @@
+"""Version-compatibility shims for ``jax.experimental.pallas.tpu``.
+
+The kernels target the current Pallas API (``pltpu.CompilerParams``); older
+jax releases (< 0.5) expose the same dataclass as ``TPUCompilerParams``.
+Resolve whichever name exists once, here, so kernel modules stay clean.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

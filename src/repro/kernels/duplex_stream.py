@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.compat import CompilerParams
+
 
 def _dequant_block(q, scale, dtype):
     return (q.astype(jnp.float32) * scale).astype(dtype)
@@ -89,7 +91,7 @@ def duplex_kv_stream(in_q, in_scale, out_x, *, interpret: bool = False,
     """
     N, T, D = in_q.shape
     s = _specs(N, T, D)
-    dim_sem = pltpu.CompilerParams(dimension_semantics=("arbitrary",))
+    dim_sem = CompilerParams(dimension_semantics=("arbitrary",))
 
     if fused:
         return pl.pallas_call(

@@ -11,6 +11,19 @@ from __future__ import annotations
 import jax
 
 
+def abstract_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Device-free AbstractMesh across jax versions.
+
+    jax >= 0.5 takes ``(shape, axis_names)``; older releases take one
+    ``((name, size), ...)`` tuple.
+    """
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single pod (256 chips) or 2×16×16 two-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

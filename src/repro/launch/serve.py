@@ -1,7 +1,14 @@
-"""Serving driver: batched greedy decode with duplex-paged KV offload.
+"""Serving driver: continuous-batching decode with duplex-paged KV.
+
+Requests arrive staggered into the ``ServeEngine`` step loop; the
+admission policy (``core.policies``) picks which waiting prefills join
+the running batch, and every step's KV block traffic pages through the
+``DuplexOffloadEngine`` in one fused kernel pass. The run report (JSON,
+last line) carries throughput plus the paging stats and modelled
+duplex-vs-serial speedup.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-      --batch 4 --prompt-len 8 --gen 16
+      --batch 4 --requests 8 --prompt-len 8 --gen 16 --arrival-every 2
 """
 
 from __future__ import annotations
@@ -12,10 +19,11 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs as configs_lib
 from repro.models import registry as R
-from repro.runtime.serve import DecodeServer, OffloadedKVCache, ServeConfig
+from repro.serve import EngineConfig, ServeEngine
 
 
 def main() -> int:
@@ -23,37 +31,81 @@ def main() -> int:
     p.add_argument("--arch", choices=configs_lib.ARCH_IDS,
                    default="smollm-135m")
     p.add_argument("--full", action="store_true")
-    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--batch", type=int, default=4,
+                   help="running decode slots (continuous batch width)")
+    p.add_argument("--requests", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=8)
     p.add_argument("--gen", type=int, default=16)
     p.add_argument("--cache-len", type=int, default=128)
+    p.add_argument("--block-tokens", type=int, default=4,
+                   help="KV page granularity")
+    p.add_argument("--hbm-blocks", type=int, default=6,
+                   help="KV pool HBM slots shared by the whole batch")
+    p.add_argument("--pool-blocks", type=int, default=0)
+    p.add_argument("--prefill-chunk", type=int, default=4)
+    p.add_argument("--policy", default="hinted",
+                   help="admission policy (core.policies registry)")
+    p.add_argument("--arrival-every", type=int, default=2,
+                   help="steps between request arrivals (0 = all at once)")
+    p.add_argument("--no-paging", action="store_true",
+                   help="disable the duplex KV pool (dense cache only)")
     p.add_argument("--offload-demo", action="store_true",
-                   help="also run the tiered-KV duplex paging demo")
+                   help="also run the legacy synthetic tiered-KV demo")
     args = p.parse_args()
 
     api = R.build(args.arch, smoke=not args.full)
     params = api.init(jax.random.PRNGKey(0))
-    server = DecodeServer(api, params,
-                          ServeConfig(max_batch=args.batch,
-                                      cache_len=args.cache_len))
-    prompts = jax.random.randint(jax.random.PRNGKey(1),
-                                 (args.batch, args.prompt_len), 0,
-                                 api.cfg.vocab)
+    cfg = EngineConfig(
+        max_batch=args.batch, cache_len=args.cache_len,
+        block_tokens=args.block_tokens, hbm_blocks=args.hbm_blocks,
+        pool_blocks=args.pool_blocks, prefill_chunk=args.prefill_chunk,
+        max_queue=max(args.requests, args.batch), policy=args.policy,
+        paging=not args.no_paging)
+    engine = ServeEngine(api, params, cfg)
+
+    key = jax.random.PRNGKey(1)
+    rids = []
+    for i in range(args.requests):
+        prompt = jax.random.randint(jax.random.fold_in(key, i),
+                                    (args.prompt_len,), 0, api.cfg.vocab)
+        rids.append(engine.submit(np.asarray(prompt), args.gen,
+                                  arrival_step=i * args.arrival_every).rid)
+
     t0 = time.monotonic()
-    out = server.generate(prompts, args.gen)
+    outs = engine.run()
     dt = time.monotonic() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("first row:", out[0].tolist())
+    total_tokens = sum(len(outs[r]) for r in rids)
+
+    first = engine.completed[rids[0]]
+    print(f"served {args.requests} requests / {total_tokens} tokens in "
+          f"{engine.step_count} steps, {dt:.2f}s "
+          f"({total_tokens / dt:.1f} tok/s)")
+    print(f"first request: admitted step {first.admitted_step}, done step "
+          f"{first.done_step}, tokens {outs[rids[0]][:8].tolist()}...")
+
+    report = {
+        "arch": args.arch,
+        "policy": args.policy,
+        "requests": args.requests,
+        "slots": args.batch,
+        "generated_tokens": int(total_tokens),
+        "steps": int(engine.step_count),
+        "wall_s": round(dt, 3),
+        "tok_s": round(total_tokens / dt, 2),
+        "paging": {k: (round(v, 3) if isinstance(v, float) else v)
+                   for k, v in engine.paging_stats().items()},
+    }
+    print(json.dumps(report))
 
     if args.offload_demo:
+        from repro.runtime.serve import OffloadedKVCache
         kv = OffloadedKVCache(n_blocks=64, hbm_blocks=16,
                               block_shape=(16, 64))
         for b in range(16):
             kv.write_block(b, jnp.ones((16, 64)) * b)
         for start in range(16, 64, 8):
             kv.touch(list(range(start, start + 8)))
-        print("offload stats:", json.dumps(
+        print("offload demo stats:", json.dumps(
             {k: round(v, 2) if isinstance(v, float) else v
              for k, v in kv.stats.items()}))
         print(f"duplex vs phase-separated paging: "

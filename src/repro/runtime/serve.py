@@ -1,38 +1,38 @@
-"""Serving runtime: batched decode with a duplex-paged, tiered KV cache.
+"""Deprecation shims over the ``repro.serve`` subsystem.
 
-The paper's LLM result (§6.4, +71.6% decode) comes from serving a model
-whose weights/KV exceed fast memory, so every token round-trips the capacity
-tier. Here the HBM-resident KV working set is a block pool; overflow blocks
-live in the host pool *int8-quantized* (2× link-byte compression on top of
-duplexing). Each decode step that needs non-resident blocks:
+The serving stack moved to ``repro.serve`` (see its package docstring):
+``ServeEngine`` is the continuous-batching step-loop engine and
+``PagedKVPool`` the vectorized duplex-paged block pool. This module keeps
+the seed-era import surface working:
 
-  1. the ``DuplexOffloadEngine`` plans page-ins co-issued with the evictions
-     they displace (both PCIe directions busy — ``duplex_select_cpu`` for
-     transfer streams);
-  2. the fused ``duplex_kv_stream`` kernel dequantizes arriving blocks while
-     quantizing departing ones in one pass (both HBM DMA directions busy);
-  3. modelled link time for duplex vs phase-separated plans is accumulated
-     for the benchmark report (CPU container: functional execution is real,
-     timing is modelled per the channel model).
+  * ``DecodeServer.generate`` — now a thin wrapper that runs a fresh
+    ``ServeEngine`` with every prompt arriving at step 0 (the static-batch
+    special case of continuous batching);
+  * ``OffloadedKVCache`` — adapter exposing the old per-block
+    ``touch``/``write_block``/``read_block`` API on top of ``PagedKVPool``
+    (batched planning, one fused kernel per transaction).
+
+New code should import from ``repro.serve`` directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import channel as channel_lib
-from repro.core.hints import HintTree, default_serving_hints
-from repro.core.offload import DuplexOffloadEngine, plan_serial
-from repro.kernels import ops as kernel_ops
+from repro.core.hints import HintTree
 from repro.models.registry import ModelAPI
+from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.kv_pool import PagedKVPool, _fresh_stats
+
+__all__ = ["DecodeServer", "OffloadedKVCache", "ServeConfig"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ServeConfig:
+    """Legacy serving config (mapped onto ``serve.EngineConfig``)."""
     max_batch: int = 8
     cache_len: int = 256
     block_tokens: int = 16          # KV page granularity
@@ -42,142 +42,93 @@ class ServeConfig:
 
 
 class OffloadedKVCache:
-    """Tiered KV block pool: HBM working set + int8 host pool.
+    """Deprecated per-block adapter over ``serve.PagedKVPool``.
 
-    Functional (jnp/numpy) realization of the serving memory hierarchy.
-    Blocks are (block_tokens, kv_dims) slabs; the hot set lives in ``hbm``;
-    cold blocks live quantized in ``host``. ``touch(needed)`` pages the
-    needed blocks in (and the least-recently-used ones out) through the
-    duplex engine and returns modelled link timings.
+    Same tiered-KV semantics as the seed class — HBM working set, int8
+    host pool, duplex-planned paging — but residency, the slot map, and
+    LRU clocks are the pool's vectorized block table, and each ``touch``
+    is one batched pool transaction (single plan, single fused kernel).
     """
 
     def __init__(self, n_blocks: int, hbm_blocks: int, block_shape,
                  hints: HintTree | None = None):
+        self.pool = PagedKVPool(n_blocks, hbm_blocks, block_shape,
+                                hints=hints)
         self.n_blocks = n_blocks
         self.hbm_capacity = hbm_blocks
-        self.block_shape = block_shape      # (tokens, dims)
-        flat = (n_blocks,) + block_shape
-        self.hbm = jnp.zeros((hbm_blocks,) + block_shape, jnp.bfloat16)
-        self.host_q = np.zeros(flat, np.int8)
-        self.host_scale = np.ones((n_blocks, block_shape[0], 1), np.float32)
-        self.resident: dict[int, int] = {}   # logical block -> hbm slot
-        self.lru: list[int] = []
-        self.engine = DuplexOffloadEngine(
-            link=channel_lib.PCIE_HOST,
-            hints=hints or default_serving_hints())
-        self.stats = {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
-                      "serial_us": 0.0}
+        self.block_shape = tuple(block_shape)
+        self.engine = self.pool.engine
 
-    def _evict_candidates(self, k: int, keep: set[int]) -> list[int]:
-        out = []
-        for b in self.lru:
-            if len(out) == k:
-                break
-            if b not in keep and b in self.resident:
-                out.append(b)
-        return out
+    # -- legacy views ------------------------------------------------------
+    @property
+    def resident(self) -> dict[int, int]:
+        """logical block -> HBM slot, as the old dict view."""
+        slot_of = np.asarray(self.pool.slot_of)
+        return {int(b): int(slot_of[b])
+                for b in np.flatnonzero(slot_of >= 0)}
 
-    def touch(self, needed: list[int]):
-        """Ensure ``needed`` logical blocks are HBM-resident."""
-        missing = [b for b in needed if b not in self.resident]
-        if not missing:
-            self._note_use(needed)
-            return
-        free = [s for s in range(self.hbm_capacity)
-                if s not in self.resident.values()]
-        n_evict = max(0, len(missing) - len(free))
-        evict = self._evict_candidates(n_evict, set(needed))
-        evict_slots = [self.resident[b] for b in evict]
+    @property
+    def lru(self) -> list[int]:
+        """Resident blocks, least-recently-used first."""
+        res = self.pool.resident_blocks()
+        clocks = np.asarray(self.pool.last_use)[res]
+        return res[np.argsort(clocks, kind="stable")].tolist()
 
-        plan = self.engine.plan_kv_paging(
-            needed_host_blocks=missing,
-            evict_hbm_blocks=evict_slots,
-            free_hbm_blocks=free,
-            host_dst_blocks=evict,
-            block_bytes=float(np.prod(self.block_shape) * 2),
-        )
-        serial = plan_serial(
-            [s.page_in for s in plan.slots if s.page_in],
-            [s.page_out for s in plan.slots if s.page_out], self.engine.link)
-        self.stats["duplex_us"] += plan.modelled_time_us()
-        self.stats["serial_us"] += serial.modelled_time_us()
-        self.stats["page_ins"] += len(missing)
-        self.stats["page_outs"] += len(evict)
+    @property
+    def hbm(self) -> jnp.ndarray:
+        return self.pool.hbm
 
-        # functional execution: fused duplex kernel does dequant+quant.
-        if missing or evict:
-            n = max(len(missing), 1)
-            in_q = jnp.asarray(self.host_q[missing] if missing else
-                               np.zeros((n,) + self.block_shape, np.int8))
-            in_scale = jnp.asarray(
-                self.host_scale[missing] if missing else
-                np.ones((n, self.block_shape[0], 1), np.float32))
-            out_x = (self.hbm[jnp.asarray(evict_slots)] if evict else
-                     jnp.zeros((n,) + self.block_shape, jnp.bfloat16))
-            # pad the shorter stream so the kernel grid is uniform
-            m = max(len(missing), len(evict), 1)
-            pad = lambda a, k: jnp.concatenate(
-                [a, jnp.zeros((k - a.shape[0],) + a.shape[1:], a.dtype)]) \
-                if a.shape[0] < k else a
-            in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
-                pad(in_q, m), pad(in_scale, m), pad(out_x, m))
-            for i, b in enumerate(evict):
-                self.host_q[b] = np.asarray(out_q[i])
-                self.host_scale[b] = np.asarray(out_scale[i])
-                del self.resident[b]
-            dst_slots = free + evict_slots
-            for i, b in enumerate(missing):
-                slot = dst_slots[i]
-                self.hbm = self.hbm.at[slot].set(in_deq[i])
-                self.resident[b] = slot
-        self._note_use(needed)
+    @property
+    def stats(self) -> dict:
+        return self.pool.stats
 
-    def _note_use(self, blocks: list[int]):
-        for b in blocks:
-            if b in self.lru:
-                self.lru.remove(b)
-            self.lru.append(b)
+    @stats.setter
+    def stats(self, value: dict) -> None:
+        fresh = _fresh_stats()
+        fresh.update(value)
+        self.pool.stats = fresh
 
-    def write_block(self, logical: int, data):
-        """Write a freshly-produced KV block (must be resident)."""
-        self.touch([logical])
-        self.hbm = self.hbm.at[self.resident[logical]].set(
-            data.astype(jnp.bfloat16))
+    # -- legacy operations -------------------------------------------------
+    def touch(self, needed) -> None:
+        self.pool.step(needed)
 
-    def read_block(self, logical: int):
-        self.touch([logical])
-        return self.hbm[self.resident[logical]]
+    def write_block(self, logical: int, data) -> None:
+        self.pool.step([logical])
+        self.pool.write([logical], jnp.asarray(data)[None])
+
+    def read_block(self, logical: int) -> jnp.ndarray:
+        self.pool.step([logical])
+        return self.pool.read([logical])[0]
 
     def duplex_speedup(self) -> float:
-        if self.stats["duplex_us"] == 0:
-            return 1.0
-        return self.stats["serial_us"] / self.stats["duplex_us"]
+        return self.pool.duplex_speedup()
 
 
 class DecodeServer:
-    """Batched greedy decoding against a ModelAPI (small-scale, real)."""
+    """Deprecated static-batch front end over ``serve.ServeEngine``."""
 
     def __init__(self, api: ModelAPI, params, cfg: ServeConfig):
         self.api = api
         self.params = params
         self.cfg = cfg
-        self._step = jax.jit(api.decode_step)
+        self.last_stats: dict | None = None
 
     def generate(self, prompts: jnp.ndarray, num_tokens: int,
-                 extras: dict | None = None):
+                 extras: dict | None = None) -> jnp.ndarray:
         """prompts: (B, P) int32. Returns (B, num_tokens) generated ids."""
         B, P = prompts.shape
-        cache = self.api.init_cache(B, self.cfg.cache_len)
-        # feed the prompt token-by-token (teacher-forced prefill)
-        logits = None
-        for t in range(P):
-            logits, cache = self._step(self.params, cache, prompts[:, t],
-                                       jnp.full((B,), t, jnp.int32))
-        outs = []
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        for i in range(num_tokens):
-            outs.append(tok)
-            logits, cache = self._step(self.params, cache, tok,
-                                       jnp.full((B,), P + i, jnp.int32))
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jnp.stack(outs, axis=1)
+        per_seq = -(-self.cfg.cache_len // self.cfg.block_tokens)
+        ecfg = EngineConfig(
+            max_batch=B,
+            cache_len=self.cfg.cache_len,
+            block_tokens=self.cfg.block_tokens,
+            hbm_blocks=min(self.cfg.hbm_blocks * B, per_seq * B),
+            prefill_chunk=4,
+            max_queue=B,
+        )
+        engine = ServeEngine(self.api, self.params, ecfg)
+        rids = [engine.submit(np.asarray(prompts[i]), num_tokens).rid
+                for i in range(B)]
+        outs = engine.run()
+        self.last_stats = engine.paging_stats()
+        return jnp.asarray(np.stack([outs[r] for r in rids]))

@@ -1,0 +1,26 @@
+"""Continuous-batching serving engine over the duplex-paged KV pool.
+
+The serving stack, layered (see README.md):
+
+  RequestQueue  — admission via the same ``core.policies`` Policy protocol
+                  the simulator uses (waiting prefills are streams);
+  PagedKVPool   — vectorized block-table KV pool (jnp residency/slot-map/
+                  LRU-clock arrays); page-in/page-out sets planned batched
+                  across all requests per step by ``DuplexOffloadEngine``;
+  ServeEngine   — the step loop: per-request arrival/completion, chunked
+                  prefill, block write-through, one ``duplex_kv_stream``
+                  kernel invocation per step for the whole batch's traffic.
+"""
+
+from repro.serve.engine import EngineConfig, ServeEngine, reference_decode
+from repro.serve.kv_pool import PagedKVPool
+from repro.serve.queue import Request, RequestQueue
+
+__all__ = [
+    "EngineConfig",
+    "PagedKVPool",
+    "Request",
+    "RequestQueue",
+    "ServeEngine",
+    "reference_decode",
+]

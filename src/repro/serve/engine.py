@@ -1,0 +1,349 @@
+"""ServeEngine — continuous-batching decode over the duplex-paged KV pool.
+
+The step loop (``ServeEngine.step``) replaces the old static
+``DecodeServer.generate`` batch loop:
+
+  1. **admission** — free batch slots are offered to the ``RequestQueue``;
+     the queue's ``core.policies`` policy picks which arrived prefills join
+     the running batch (the scheduler stack serving real traffic);
+  2. **micro-steps** — one batched ``decode_step`` advances every active
+     slot by one token (prompt token while prefilling, last sampled token
+     while decoding); up to ``prefill_chunk - 1`` extra micro-steps advance
+     only the prefilling slots, so long prompts stream in chunks without
+     stalling running decodes;
+  3. **KV paging** — freshly filled KV blocks are written through to the
+     ``PagedKVPool`` and the whole batch's block demand for the step is
+     made resident in ONE pool transaction: one ``DuplexOffloadEngine``
+     plan, one fused ``duplex_kv_stream`` kernel invocation, regardless of
+     how many requests page.
+
+Correctness contract: the dense per-slot cache is the HBM working set the
+model attends over, so generation is exact — a request decodes
+token-for-token identically whether it ran in a static batch or arrived
+mid-stream (tests assert this). The pool mirrors that working set at block
+granularity against a *smaller* HBM budget: every filled block's real KV
+round-trips the int8 host tier as the LRU streams it in and out, which is
+the paper's capacity-tier traffic, measured on the actual request stream
+(functional execution real, link timing modelled — channel-model doctrine).
+
+Frozen-slot micro-steps: ``decode_step`` always writes a K/V entry for
+every batch row, so non-advancing slots are fed a dummy token at their
+*next* write position. That position is overwritten by the slot's next
+real token before any real query attends it, and dummy logits are
+discarded, so frozen rows never contaminate generation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hints import HintTree, default_serving_hints
+from repro.models.registry import ModelAPI
+from repro.serve.kv_pool import PagedKVPool
+from repro.serve.queue import (DECODE, DONE, PREFILL, Request, RequestQueue)
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_batch: int = 4          # running decode slots
+    cache_len: int = 128        # dense cache depth per slot
+    block_tokens: int = 16      # KV page granularity (tokens)
+    hbm_blocks: int = 8         # pool HBM slots, shared by the whole batch
+    pool_blocks: int = 0        # logical pool capacity (0 = auto)
+    prefill_chunk: int = 4      # prompt tokens consumed per engine step
+    max_queue: int = 32
+    policy: str = "hinted"      # admission policy (core.policies registry)
+    paging: bool = True         # False: pure continuous batching, no pool
+
+    def resolved_pool_blocks(self) -> int:
+        if self.pool_blocks:
+            return self.pool_blocks
+        per_seq = math.ceil(self.cache_len / self.block_tokens)
+        return max(2 * self.hbm_blocks, per_seq * self.max_batch)
+
+
+def _kv_cache_leaves(cache):
+    """The transformer-family scanned cache dict, or None if the arch's
+    cache has no token-indexed K/V (e.g. RWKV state) — paging is gated off
+    for those."""
+    if (isinstance(cache, dict) and {"k", "v", "pos"} <= set(cache)
+            and cache["k"].ndim == 5):
+        return cache
+    return None
+
+
+def _extract_blocks(cache, slot_idx, t0, block_tokens: int) -> jnp.ndarray:
+    """Gather KV blocks from the dense cache, batched over (slot, t0) pairs.
+
+    cache["k"/"v"]: (L, B, W, KV, hd). Returns (n, block_tokens, kv_dims)
+    bf16 slabs with kv_dims = L * 2 * KV * hd — the block-table-indexed
+    read the pool pages.
+    """
+    W = cache["k"].shape[2]
+    pos = (np.asarray(t0, np.int64)[:, None]
+           + np.arange(block_tokens)[None, :]) % W          # (n, bt)
+    idx = jnp.asarray(pos, jnp.int32)
+    sl = jnp.asarray(np.asarray(slot_idx, np.int32))
+
+    def take(arr):
+        a = jnp.moveaxis(arr, 1, 0)[sl]                     # (n, L, W, KV, hd)
+        ix = idx[:, None, :, None, None]
+        ix = jnp.broadcast_to(
+            ix, a.shape[:2] + (block_tokens,) + a.shape[3:])
+        return jnp.take_along_axis(a, ix, axis=2)           # (n, L, bt, KV, hd)
+
+    kv = jnp.stack([take(cache["k"]), take(cache["v"])], axis=2)
+    kv = jnp.moveaxis(kv, 3, 1)                             # (n, bt, L, 2, KV, hd)
+    n = kv.shape[0]
+    return kv.reshape(n, block_tokens, -1).astype(jnp.bfloat16)
+
+
+class ServeEngine:
+    """Continuous-batching serving engine for one ``ModelAPI``."""
+
+    def __init__(self, api: ModelAPI, params, cfg: EngineConfig,
+                 hints: HintTree | None = None):
+        self.api = api
+        self.params = params
+        self.cfg = cfg
+        self.hints = hints or default_serving_hints()
+        self._step_fn = jax.jit(api.decode_step)
+        self.cache = api.init_cache(cfg.max_batch, cfg.cache_len)
+        self._cache0 = self.cache   # pristine rows for slot recycling
+        self.slots: list[Request | None] = [None] * cfg.max_batch
+
+        kv = _kv_cache_leaves(self.cache)
+        self.paged = cfg.paging and kv is not None
+        if self.paged:
+            L, _, _, KV, hd = kv["k"].shape
+            kv_dims = L * 2 * KV * hd
+            self.pool = PagedKVPool(
+                cfg.resolved_pool_blocks(), cfg.hbm_blocks,
+                (cfg.block_tokens, kv_dims), hints=self.hints)
+            kv_bytes = float(kv_dims * 2)
+        else:
+            self.pool = None
+            kv_bytes = 4096.0
+        self.queue = RequestQueue(cfg.max_queue, policy=cfg.policy,
+                                  hints=self.hints,
+                                  kv_bytes_per_token=kv_bytes)
+        self.step_count = 0
+        self.completed: dict[int, Request] = {}
+        self._scan_cursor: dict[int, int] = {}   # rid -> cold-block cursor
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, prompt, max_new_tokens: int, arrival_step: int = 0,
+               hint_path: str = "/serve/prefill") -> Request:
+        req = Request(prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens,
+                      arrival_step=arrival_step, hint_path=hint_path)
+        if req.prompt_len < 1:
+            raise ValueError("prompt must contain at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        total = req.prompt_len + max_new_tokens
+        if total > self.cfg.cache_len:
+            raise ValueError(
+                f"request needs {total} cache positions but cache_len is "
+                f"{self.cfg.cache_len}")
+        return self.queue.submit(req)
+
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def pending(self) -> int:
+        return len(self.queue) + len(self.active())
+
+    # -- the step loop -----------------------------------------------------
+    def step(self) -> dict:
+        now = self.step_count
+        admitted = self._admit(now)
+        advanced = self._advance_tokens()
+        paged = self._page_kv() if self.paged else {"page_ins": 0,
+                                                    "page_outs": 0}
+        completed = self._retire(now)
+        self.step_count += 1
+        return {"step": now, "admitted": admitted, "advanced": advanced,
+                "completed": completed, **paged}
+
+    def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
+        """Drive steps until every submitted request completes."""
+        limit = max_steps if max_steps is not None else 10_000
+        for _ in range(limit):
+            if not self.pending():
+                break
+            self.step()
+        if self.pending():
+            raise RuntimeError(f"requests still pending after {limit} steps")
+        return {rid: np.asarray(r.generated, np.int32)
+                for rid, r in sorted(self.completed.items())}
+
+    # -- phase 1: admission -------------------------------------------------
+    def _admit(self, now: int) -> int:
+        free = [i for i, r in enumerate(self.slots) if r is None]
+        if not free:
+            return 0
+        admitted = self.queue.dispatch(now, len(free))
+        for req in admitted:
+            slot = free.pop(0)
+            req.slot = slot
+            self.slots[slot] = req
+            self._reset_slot(slot)
+            self._scan_cursor[req.rid] = 0
+        return len(admitted)
+
+    def _reset_slot(self, slot: int) -> None:
+        """Retire the previous occupant's cache rows by restoring the
+        pristine init state (every cache family — attention K/V/pos rings,
+        RWKV/Mamba recurrent state — stacks layers first, batch second)."""
+        self.cache = jax.tree.map(
+            lambda leaf, leaf0: leaf.at[:, slot].set(leaf0[:, slot]),
+            self.cache, self._cache0)
+
+    # -- phase 2: token micro-steps -----------------------------------------
+    def _written(self, r: Request) -> int:
+        """Tokens whose KV is actually in the dense cache: all consumed
+        prompt tokens, plus every generated token that has been fed back
+        (the newest sampled token is only written on its next feed). Also
+        the next write position — the cache is written densely in order."""
+        if r.state == PREFILL:
+            return r.consumed
+        return r.consumed + len(r.generated) - 1
+
+    def _advance_tokens(self) -> int:
+        if not self.active():
+            return 0
+        advanced = 0
+        for micro in range(max(1, self.cfg.prefill_chunk)):
+            movers = [r for r in self.active()
+                      if not (r.state == DONE)
+                      and (micro == 0 or r.state == PREFILL)]
+            if not movers:
+                break
+            tokens = np.zeros((self.cfg.max_batch,), np.int32)
+            pos = np.zeros((self.cfg.max_batch,), np.int32)
+            for i, r in enumerate(self.slots):
+                if r is None:
+                    continue
+                pos[i] = self._written(r)
+                if r in movers:
+                    tokens[i] = (r.prompt[r.consumed] if r.state == PREFILL
+                                 else r.generated[-1])
+            logits, self.cache = self._step_fn(
+                self.params, self.cache, jnp.asarray(tokens),
+                jnp.asarray(pos))
+            picked = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for r in movers:
+                advanced += 1
+                if r.state == PREFILL:
+                    r.consumed += 1
+                    if r.consumed == r.prompt_len:
+                        r.state = DECODE
+                        r.generated.append(int(picked[r.slot]))
+                else:
+                    r.generated.append(int(picked[r.slot]))
+                if r.state == DECODE and r.finished:
+                    r.state = DONE
+        return advanced
+
+    # -- phase 3: batched KV paging -----------------------------------------
+    def _page_kv(self) -> dict:
+        bt = self.cfg.block_tokens
+        new_pairs: list[tuple[Request, int]] = []   # (req, block_index)
+        for r in self.active():
+            n_filled = self._written(r) // bt
+            while len(r.blocks) < n_filled:
+                bi = len(r.blocks)
+                r.blocks.extend(self.pool.alloc(1))
+                new_pairs.append((r, bi))
+
+        new_ids = [r.blocks[bi] for r, bi in new_pairs]
+        if len(new_ids) > self.pool.hbm_capacity:
+            raise RuntimeError(
+                f"{len(new_ids)} blocks filled in one step but pool HBM "
+                f"holds {self.pool.hbm_capacity}; shrink prefill_chunk or "
+                f"grow hbm_blocks")
+        # new blocks first — they must be resident for the write-through;
+        # demand beyond capacity is advisory and may be trimmed.
+        needed = list(dict.fromkeys(new_ids + self._block_demand()))
+        needed = needed[:self.pool.hbm_capacity]
+        if not needed:
+            return {"page_ins": 0, "page_outs": 0}
+        report = self.pool.step(needed)
+
+        if new_pairs:
+            slot_idx = [r.slot for r, _ in new_pairs]
+            t0 = [bi * bt for _, bi in new_pairs]
+            data = _extract_blocks(self.cache, slot_idx, t0, bt)
+            self.pool.write([r.blocks[bi] for r, bi in new_pairs], data)
+        return report
+
+    def _block_demand(self) -> list[int]:
+        """The step's resident set: per-slot fair share of the pool's HBM,
+        newest blocks pinned, remaining share cycling through the cold
+        tail (attention re-reads the whole history every token; a smaller
+        working set streams it block-at-a-time — the capacity-tier
+        round-trip traffic)."""
+        holders = [r for r in self.active() if r.blocks]
+        if not holders:
+            return []
+        budget = max(1, self.pool.hbm_capacity // len(holders))
+        demand: list[int] = []
+        for r in holders:
+            picks = [r.blocks[-1]]
+            older = r.blocks[:-1]
+            k = min(budget - 1, len(older))
+            if k > 0:
+                c = self._scan_cursor.get(r.rid, 0) % len(older)
+                ring = older[c:] + older[:c]
+                picks.extend(ring[:k])
+                self._scan_cursor[r.rid] = (c + k) % len(older)
+            demand.extend(picks)
+        return demand[:self.pool.hbm_capacity]
+
+    # -- phase 4: completion -------------------------------------------------
+    def _retire(self, now: int) -> int:
+        n = 0
+        for i, r in enumerate(self.slots):
+            if r is not None and r.state == DONE:
+                r.done_step = now
+                if self.paged and r.blocks:
+                    self.pool.free(r.blocks)
+                self._scan_cursor.pop(r.rid, None)
+                self.slots[i] = None
+                self.completed[r.rid] = r
+                n += 1
+        return n
+
+    # -- reporting -----------------------------------------------------------
+    def paging_stats(self) -> dict:
+        if not self.paged:
+            return {"paged": False}
+        return {"paged": True, **self.pool.stats,
+                "duplex_speedup": self.pool.duplex_speedup()}
+
+
+def reference_decode(api: ModelAPI, params, prompts: jnp.ndarray,
+                     num_tokens: int, cache_len: int = 128) -> jnp.ndarray:
+    """Static-batch greedy decode — the token-for-token oracle the engine
+    is tested against. prompts: (B, P) int32; returns (B, num_tokens)."""
+    B, P = prompts.shape
+    step = jax.jit(api.decode_step)
+    cache = api.init_cache(B, cache_len)
+    logits = None
+    for t in range(P):
+        logits, cache = step(params, cache, prompts[:, t],
+                             jnp.full((B,), t, jnp.int32))
+    outs = []
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    for i in range(num_tokens):
+        outs.append(tok)
+        logits, cache = step(params, cache, tok,
+                             jnp.full((B,), P + i, jnp.int32))
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.stack(outs, axis=1)

@@ -1,0 +1,174 @@
+"""Request admission via the scheduler's Policy protocol (CXLAimPod §4.4).
+
+The simulator schedules *streams*; the serving engine schedules *requests*.
+This module closes that gap: each waiting prefill is presented to a
+``core.policies`` policy as a stream whose backlog is its remaining KV
+traffic (prefill writes KV — write-leaning; decode re-reads the growing
+cache — read-leaning), with hint fields resolved from the same ``HintTree``
+scopes the simulator uses (``/serve/prefill`` opts out of duplex
+intervention, per the paper's read-heavy lesson). Each engine step,
+``dispatch`` asks the policy for run weights over the waiting set and
+admits the top-weighted arrived requests into the free decode slots, then
+feeds service back through ``Policy.update`` so vruntime fairness carries
+across steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as channel_lib
+from repro.core import policies as policies_lib
+from repro.core.hints import HintTree, default_serving_hints
+
+WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+
+_rid = itertools.count()
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    """One generation request moving through the serving engine."""
+    prompt: np.ndarray                  # (P,) int32 prompt token ids
+    max_new_tokens: int
+    arrival_step: int = 0
+    hint_path: str = "/serve/prefill"
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid))
+    state: str = WAITING
+    consumed: int = 0                   # prompt tokens fed so far
+    generated: list = dataclasses.field(default_factory=list)
+    blocks: list = dataclasses.field(default_factory=list)  # pool block ids
+    slot: int = -1                      # engine batch slot while running
+    admitted_step: int = -1
+    done_step: int = -1
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def length(self) -> int:
+        """Tokens currently in the KV cache for this request."""
+        return self.consumed + len(self.generated)
+
+    @property
+    def finished(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class RequestQueue:
+    """Bounded waiting room with policy-driven admission."""
+
+    def __init__(self, capacity: int = 32,
+                 policy: str | policies_lib.Policy = "hinted",
+                 params: policies_lib.PolicyParams | None = None,
+                 hints: HintTree | None = None,
+                 link: channel_lib.ChannelModel = channel_lib.PCIE_HOST,
+                 kv_bytes_per_token: float = 4096.0):
+        self.capacity = capacity
+        self.policy = (policies_lib.get_policy(policy)
+                       if isinstance(policy, str) else policy)
+        self.params = params or policies_lib.PolicyParams()
+        self.hints = hints or default_serving_hints()
+        self.kv_bytes = float(kv_bytes_per_token)
+        self._slots: list[Request | None] = [None] * capacity
+        self._state = self.policy.init(self.params, capacity)
+        opt = channel_lib.duplex_benefit(link)
+        self._opt_r = jnp.float32(opt["peak_read_fraction"])
+        self._duplex = jnp.asarray(link.duplex)
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, req: Request) -> Request:
+        for i, cur in enumerate(self._slots):
+            if cur is None:
+                self._slots[i] = req
+                return req
+        raise RuntimeError(f"request queue full ({self.capacity})")
+
+    def waiting(self, now: int | None = None) -> list[Request]:
+        out = [r for r in self._slots if r is not None]
+        if now is not None:
+            out = [r for r in out if r.arrival_step <= now]
+        return out
+
+    def __len__(self) -> int:
+        return len(self.waiting())
+
+    # -- policy-driven admission -------------------------------------------
+    def _observe(self, now: int) -> tuple[policies_lib.Obs, np.ndarray]:
+        S = self.capacity
+        z = np.zeros((S,), np.float32)
+        backlog_r, backlog_w = z.copy(), z.copy()
+        head_r, head_w = z.copy(), z.copy()
+        hint_rf = np.full((S,), 0.5, np.float32)
+        hint_pri = np.ones((S,), np.float32)
+        hint_opt = np.ones((S,), bool)
+        arrived = np.zeros((S,), bool)
+        for i, r in enumerate(self._slots):
+            if r is None or r.arrival_step > now:
+                continue
+            arrived[i] = True
+            # prefill writes the prompt's KV; decode then re-reads the
+            # whole cache once per generated token (triangular sum).
+            n_p, n_g = r.prompt_len, r.max_new_tokens
+            backlog_w[i] = n_p * self.kv_bytes
+            backlog_r[i] = (n_g * n_p + n_g * (n_g + 1) / 2) * self.kv_bytes
+            head_w[i] = min(n_p, 4) * self.kv_bytes
+            head_r[i] = 0.0
+            h = self.hints.resolve(r.hint_path).resolved()
+            hint_rf[i] = h.read_fraction
+            hint_pri[i] = h.priority
+            hint_opt[i] = h.duplex_opt_in
+        obs = policies_lib.Obs(
+            step=jnp.int32(now),
+            backlog_read=jnp.asarray(backlog_r),
+            backlog_write=jnp.asarray(backlog_w),
+            arrival_read=jnp.asarray(z),
+            arrival_write=jnp.asarray(z),
+            head_read=jnp.asarray(head_r),
+            head_write=jnp.asarray(head_w),
+            prev_weights=jnp.zeros((S,), jnp.float32),
+            prev_util=jnp.float32(0.0),
+            opt_r=self._opt_r,
+            duplex=self._duplex,
+            hint_rf=jnp.asarray(hint_rf),
+            hint_priority=jnp.asarray(hint_pri),
+            hint_opt_in=jnp.asarray(hint_opt),
+        )
+        return obs, arrived
+
+    def dispatch(self, now: int, n_free: int) -> list[Request]:
+        """Admit up to ``n_free`` arrived requests, policy-ordered."""
+        if n_free <= 0 or not self.waiting(now):
+            return []
+        obs, arrived = self._observe(now)
+        self._state, w = self.policy.schedule(self.params, self._state, obs)
+        w = np.asarray(w, np.float32)
+        # policy weight first, FIFO (arrival, submit order) as tie-break
+        order = sorted(
+            np.flatnonzero(arrived).tolist(),
+            key=lambda i: (-w[i], self._slots[i].arrival_step, i))
+        take = order[:n_free]
+        admitted = []
+        moved_r = np.zeros((self.capacity,), np.float32)
+        moved_w = np.zeros((self.capacity,), np.float32)
+        for i in take:
+            req = self._slots[i]
+            self._slots[i] = None
+            req.state = PREFILL
+            req.admitted_step = now
+            admitted.append(req)
+            moved_w[i] = req.prompt_len * self.kv_bytes
+        fb = policies_lib.Feedback(
+            moved_read=jnp.asarray(moved_r),
+            moved_write=jnp.asarray(moved_w),
+            utilization=jnp.float32(min(1.0, len(take) / max(n_free, 1))))
+        self._state = self.policy.update(self.params, self._state, fb)
+        return admitted

@@ -2,7 +2,7 @@
 policy (pure functions — no device state)."""
 
 import pytest
-from jax.sharding import AbstractMesh
+from repro.launch.mesh import abstract_mesh
 
 from benchmarks.roofline import analyse
 from repro.launch.dryrun import _shape_bytes, parse_collectives
@@ -79,18 +79,18 @@ class TestRooflineAnalyse:
 
 class TestParallelismPolicy:
     def test_pure_dp_for_small_models(self):
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         F, T, DP = parallelism(R.build("smollm-135m"), mesh)
         assert F is None and T is None
         assert DP == ("data", "model")
 
     def test_2d_for_big_dense(self):
-        mesh = AbstractMesh((16, 16), ("data", "model"))
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         F, T, DP = parallelism(R.build("qwen2.5-14b"), mesh)
         assert F == ("data",) and T == "model"
 
     def test_fsdp_over_pod_for_kimi(self):
-        mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+        mesh = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
         F, T, DP = parallelism(R.build("kimi-k2-1t-a32b"), mesh)
         assert F == ("pod", "data")
         assert DP == ("pod", "data")

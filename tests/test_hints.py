@@ -1,7 +1,10 @@
 """Hint tree (cgroup analogue) — inheritance, override, serialization."""
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.core.hints import HintTree, MemoryHint, SYSTEM_DEFAULT, \
     default_serving_hints, default_training_hints

@@ -1,0 +1,116 @@
+"""PagedKVPool: residency invariants, vectorized LRU, int8 round-trip,
+batched duplex paging."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.kv_pool import PagedKVPool
+
+
+def _pool(n=16, hbm=4, shape=(8, 32)):
+    return PagedKVPool(n_blocks=n, hbm_blocks=hbm, block_shape=shape)
+
+
+def _rand(b, shape=(8, 32)):
+    return jax.random.normal(jax.random.PRNGKey(b), shape).astype(
+        jnp.bfloat16)
+
+
+class TestResidency:
+    def test_invariants_hold_through_churn(self):
+        pool = _pool()
+        for step in range(12):
+            pool.step([(step * 3 + i) % 16 for i in range(3)])
+            pool.check_invariants()
+        assert len(pool.resident_blocks()) <= pool.hbm_capacity
+
+    def test_demand_over_capacity_rejected(self):
+        pool = _pool(hbm=4)
+        with pytest.raises(ValueError, match="demands"):
+            pool.step([0, 1, 2, 3, 4])
+
+    def test_write_requires_residency(self):
+        pool = _pool()
+        with pytest.raises(ValueError, match="non-resident"):
+            pool.write([3], jnp.zeros((1, 8, 32)))
+
+    def test_free_releases_hbm(self):
+        pool = _pool(hbm=4)
+        pool.step([0, 1, 2, 3])
+        pool.free([0, 1])
+        pool.check_invariants()
+        assert not pool.is_resident([0, 1]).any()
+        # freed slots absorb new blocks without evictions
+        before = pool.stats["page_outs"]
+        pool.step([4, 5])
+        assert pool.stats["page_outs"] == before
+
+    def test_alloc_exhaustion(self):
+        pool = _pool(n=4)
+        pool.alloc(4)
+        with pytest.raises(RuntimeError, match="exhausted"):
+            pool.alloc(1)
+        pool.free([0])
+        assert pool.alloc(1) == [0]
+
+
+class TestLRU:
+    def test_eviction_order(self):
+        pool = _pool(hbm=2)
+        pool.step([0])
+        pool.step([1])
+        pool.step([0])          # 0 is now most-recent
+        pool.step([2])          # evicts 1 (LRU), not 0
+        assert pool.is_resident([0]).all() and pool.is_resident([2]).all()
+        assert not pool.is_resident([1]).any()
+
+    def test_needed_blocks_never_evicted(self):
+        pool = _pool(hbm=3)
+        pool.step([0, 1, 2])
+        pool.step([0, 1, 3])    # must evict 2, not a needed block
+        assert pool.is_resident([0, 1, 3]).all()
+        assert not pool.is_resident([2]).any()
+
+
+class TestRoundTrip:
+    def test_int8_roundtrip_tolerance(self):
+        pool = _pool(n=8, hbm=2)
+        data = {b: _rand(b) for b in range(4)}
+        for b, x in data.items():
+            pool.step([b])
+            pool.write([b], x[None])     # later steps evict earlier blocks
+        for b, x in data.items():
+            pool.step([b])
+            back = pool.read([b])[0]
+            amax = float(jnp.max(jnp.abs(x.astype(jnp.float32))))
+            err = float(jnp.max(jnp.abs(back.astype(jnp.float32)
+                                        - x.astype(jnp.float32))))
+            assert err <= amax / 127.0 + 0.02
+
+
+class TestBatchedPaging:
+    def test_one_kernel_call_per_step(self):
+        pool = _pool(n=32, hbm=8)
+        pool.step(range(8))
+        calls0, steps0 = pool.stats["kernel_calls"], pool.stats["steps"]
+        for start in range(8, 32, 4):
+            pool.step(list(range(start, start + 4)))   # 4 ins + 4 outs each
+        assert pool.stats["steps"] - steps0 == 6
+        assert pool.stats["kernel_calls"] - calls0 == 6   # one per step
+        assert pool.stats["page_ins"] == 8 + 24
+
+    def test_duplex_speedup_on_mixed_batches(self):
+        pool = _pool(n=32, hbm=8)
+        pool.step(range(8))
+        pool.reset_stats()
+        for start in range(8, 32, 4):
+            pool.step(list(range(start, start + 4)))
+        assert pool.duplex_speedup() >= 1.0
+        assert pool.duplex_speedup() > 1.3    # ins co-issued with outs
+
+    def test_unidirectional_paging_no_slowdown(self):
+        pool = _pool(n=8, hbm=8)
+        pool.step(range(8))                   # pure page-in, no evictions
+        assert pool.duplex_speedup() >= 1.0

@@ -1,9 +1,11 @@
 """Duplex offload engine: plan validity, functional equivalence, timing."""
 
-import hypothesis.strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax
 import jax.numpy as jnp
-import pytest
 from hypothesis import given, settings
 
 from repro.core import channel as ch

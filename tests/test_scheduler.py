@@ -1,6 +1,9 @@
 """Simulator invariants (property-based) + A/B harness behavior."""
 
-import hypothesis.strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
 import jax.numpy as jnp
 from hypothesis import given, settings
 

@@ -3,7 +3,9 @@ no devices needed)."""
 
 import jax
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.mesh import abstract_mesh
 
 from repro import configs as configs_lib
 from repro.launch import sharding as sh
@@ -12,8 +14,8 @@ from repro.models import registry as R
 
 def _mesh(multi_pod=False):
     if multi_pod:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return abstract_mesh((16, 16), ("data", "model"))
 
 
 def _params_shape(api):
