@@ -101,9 +101,9 @@ def main() -> int:
         from repro.runtime.serve import OffloadedKVCache
         kv = OffloadedKVCache(n_blocks=64, hbm_blocks=16,
                               block_shape=(16, 64))
-        for b in range(16):
+        for b in range(64):                 # fill + spill real data to host
             kv.write_block(b, jnp.ones((16, 64)) * b)
-        for start in range(16, 64, 8):
+        for start in range(0, 48, 8):       # real ins co-issued with outs
             kv.touch(list(range(start, start + 8)))
         print("offload demo stats:", json.dumps(
             {k: round(v, 2) if isinstance(v, float) else v

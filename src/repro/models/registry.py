@@ -63,6 +63,10 @@ class ModelAPI(NamedTuple):
     decode_step: Callable         # (params, cache, tokens, pos) -> (logits, cache)
     param_count: int
     active_param_count: int
+    # "ring": every cache leaf is token-indexed (a K/V ring overwrites a
+    # stale entry before it is read); "recurrent": the cache carries state
+    # that any decode_step advances irreversibly (RWKV wkv/shifts, Mamba).
+    cache_kind: str = "ring"
 
 
 def runnable(arch_id: str, shape: str) -> bool:
@@ -126,6 +130,7 @@ def _rwkv_api(arch_id: str, cfg) -> ModelAPI:
             params, cfg, cache, tokens, pos),
         param_count=cfg.param_count(),
         active_param_count=cfg.active_param_count(),
+        cache_kind="recurrent",
     )
 
 
@@ -142,6 +147,7 @@ def _hybrid_api(arch_id: str, cfg) -> ModelAPI:
             params, cfg, cache, tokens, pos),
         param_count=cfg.param_count(),
         active_param_count=cfg.active_param_count(),
+        cache_kind="recurrent",
     )
 
 

@@ -116,6 +116,11 @@ class DecodeServer:
     def generate(self, prompts: jnp.ndarray, num_tokens: int,
                  extras: dict | None = None) -> jnp.ndarray:
         """prompts: (B, P) int32. Returns (B, num_tokens) generated ids."""
+        if not self.cfg.greedy or self.cfg.seed != 0 or extras:
+            raise NotImplementedError(
+                "the DecodeServer shim only supports greedy decoding "
+                "(greedy=True, seed=0) with no extras; drive "
+                "repro.serve.ServeEngine directly for anything else")
         B, P = prompts.shape
         per_seq = -(-self.cfg.cache_len // self.cfg.block_tokens)
         ecfg = EngineConfig(

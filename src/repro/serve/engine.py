@@ -26,11 +26,17 @@ round-trips the int8 host tier as the LRU streams it in and out, which is
 the paper's capacity-tier traffic, measured on the actual request stream
 (functional execution real, link timing modelled — channel-model doctrine).
 
-Frozen-slot micro-steps: ``decode_step`` always writes a K/V entry for
-every batch row, so non-advancing slots are fed a dummy token at their
-*next* write position. That position is overwritten by the slot's next
-real token before any real query attends it, and dummy logits are
-discarded, so frozen rows never contaminate generation.
+Frozen-slot micro-steps: ``decode_step`` always advances the cache of
+every batch row, so non-advancing slots see a dummy token. Dummy logits
+are discarded. For the pure token-indexed transformer ring cache that is
+already safe: the dummy K/V lands at the frozen row's *next* write
+position and is overwritten by that row's next real token before any real
+query attends it. Recurrent families (RWKV wkv/shift state, hybrid Mamba
+state) are different — their state is irreversibly advanced by any token
+they see — so for non-ring caches each micro-step restores the live
+frozen rows' leaves from the pre-step cache (a per-row ``jnp.where``
+select; empty and DONE rows are instead wiped by ``_reset_slot`` on
+admission). Either way frozen rows never contaminate generation.
 """
 
 from __future__ import annotations
@@ -118,6 +124,12 @@ class ServeEngine:
         self.slots: list[Request | None] = [None] * cfg.max_batch
 
         kv = _kv_cache_leaves(self.cache)
+        # Token-indexed ring caches (declared per-arch on ModelAPI)
+        # overwrite a frozen row's dummy K/V before it is ever attended;
+        # recurrent families need the frozen-row restore (see module
+        # docstring). Paging additionally needs the extractable top-level
+        # transformer K/V layout.
+        self._ring_cache = api.cache_kind == "ring"
         self.paged = cfg.paging and kv is not None
         if self.paged:
             L, _, _, KV, hd = kv["k"].shape
@@ -227,6 +239,7 @@ class ServeEngine:
                 break
             tokens = np.zeros((self.cfg.max_batch,), np.int32)
             pos = np.zeros((self.cfg.max_batch,), np.int32)
+            frozen = np.zeros((self.cfg.max_batch,), bool)
             for i, r in enumerate(self.slots):
                 if r is None:
                     continue
@@ -234,9 +247,26 @@ class ServeEngine:
                 if r in movers:
                     tokens[i] = (r.prompt[r.consumed] if r.state == PREFILL
                                  else r.generated[-1])
+                elif r.state != DONE:
+                    frozen[i] = True
+            prev_cache = self.cache
             logits, self.cache = self._step_fn(
                 self.params, self.cache, jnp.asarray(tokens),
                 jnp.asarray(pos))
+            if frozen.any() and not self._ring_cache:
+                # Live frozen rows (DECODE during a prefill-only
+                # micro-step) must keep their pre-step cache: recurrent
+                # state (RWKV wkv/shifts, Mamba) is irreversibly advanced
+                # by the dummy token otherwise. Ring caches skip this —
+                # the dummy entry is overwritten before it is read — as
+                # do empty and DONE rows, wiped by _reset_slot on
+                # admission.
+                sel = jnp.asarray(~frozen)
+                self.cache = jax.tree.map(
+                    lambda new, old: jnp.where(
+                        sel.reshape((1, -1) + (1,) * (new.ndim - 2)),
+                        new, old),
+                    self.cache, prev_cache)
             picked = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
             for r in movers:
                 advanced += 1
@@ -254,8 +284,9 @@ class ServeEngine:
     # -- phase 3: batched KV paging -----------------------------------------
     def _page_kv(self) -> dict:
         bt = self.cfg.block_tokens
+        live = [r for r in self.active() if r.state != DONE]
         new_pairs: list[tuple[Request, int]] = []   # (req, block_index)
-        for r in self.active():
+        for r in live:
             n_filled = self._written(r) // bt
             while len(r.blocks) < n_filled:
                 bi = len(r.blocks)
@@ -270,8 +301,10 @@ class ServeEngine:
                 f"grow hbm_blocks")
         # new blocks first — they must be resident for the write-through;
         # demand beyond capacity is advisory and may be trimmed.
-        needed = list(dict.fromkeys(new_ids + self._block_demand()))
+        demand = self._block_demand(live)
+        needed = list(dict.fromkeys(new_ids + [b for _, b, _ in demand]))
         needed = needed[:self.pool.hbm_capacity]
+        self._advance_cursors(demand, set(needed))
         if not needed:
             return {"page_ins": 0, "page_outs": 0}
         report = self.pool.step(needed)
@@ -283,28 +316,44 @@ class ServeEngine:
             self.pool.write([r.blocks[bi] for r, bi in new_pairs], data)
         return report
 
-    def _block_demand(self) -> list[int]:
-        """The step's resident set: per-slot fair share of the pool's HBM,
-        newest blocks pinned, remaining share cycling through the cold
-        tail (attention re-reads the whole history every token; a smaller
-        working set streams it block-at-a-time — the capacity-tier
-        round-trip traffic)."""
-        holders = [r for r in self.active() if r.blocks]
+    def _block_demand(self, live: list[Request]
+                      ) -> list[tuple[int, int, bool]]:
+        """The step's resident set as (rid, block, is_cold) triples:
+        per-slot fair share of the pool's HBM, newest blocks pinned,
+        remaining share cycling through the cold tail (attention re-reads
+        the whole history every token; a smaller working set streams it
+        block-at-a-time — the capacity-tier round-trip traffic). Cursors
+        advance in ``_advance_cursors``, only for picks actually paged."""
+        holders = [r for r in live if r.blocks]
         if not holders:
             return []
         budget = max(1, self.pool.hbm_capacity // len(holders))
-        demand: list[int] = []
+        demand: list[tuple[int, int, bool]] = []
         for r in holders:
-            picks = [r.blocks[-1]]
+            demand.append((r.rid, r.blocks[-1], False))
             older = r.blocks[:-1]
             k = min(budget - 1, len(older))
             if k > 0:
                 c = self._scan_cursor.get(r.rid, 0) % len(older)
                 ring = older[c:] + older[:c]
-                picks.extend(ring[:k])
-                self._scan_cursor[r.rid] = (c + k) % len(older)
-            demand.extend(picks)
-        return demand[:self.pool.hbm_capacity]
+                demand.extend((r.rid, b, True) for b in ring[:k])
+        return demand
+
+    def _advance_cursors(self, demand: list[tuple[int, int, bool]],
+                         kept: set[int]) -> None:
+        """Move each request's cold-scan cursor past the cold picks that
+        survived the capacity trim — trimmed blocks were never paged, so
+        the round-robin scan must revisit them next step."""
+        stepped: dict[int, int] = {}
+        for rid, block, cold in demand:
+            if cold and block in kept:
+                stepped[rid] = stepped.get(rid, 0) + 1
+        for r in self.active():
+            k = stepped.get(r.rid)
+            if k and len(r.blocks) > 1:
+                n = len(r.blocks) - 1
+                c = self._scan_cursor.get(r.rid, 0) % n
+                self._scan_cursor[r.rid] = (c + k) % n
 
     # -- phase 4: completion -------------------------------------------------
     def _retire(self, now: int) -> int:

@@ -62,6 +62,13 @@ class PagedKVPool:
         self.last_use = jnp.zeros((n_blocks,), jnp.int32)  # LRU clock
         self._clock = 0
         self._allocated = np.zeros((n_blocks,), bool)
+        # blocks whose HBM copy is newer than host_q (dirty after write(),
+        # clean after the eviction that quantizes it out) — evicting a
+        # clean or never-written block carries no data and bills nothing.
+        self._dirty = np.zeros((n_blocks,), bool)
+        # blocks whose host_q copy is real (written by an eviction); a
+        # never-evicted block has nothing to page in.
+        self._has_host = np.zeros((n_blocks,), bool)
         self.engine = DuplexOffloadEngine(
             link=link, hints=hints or default_serving_hints())
         self.stats = _fresh_stats()
@@ -83,11 +90,15 @@ class PagedKVPool:
         if blocks.size == 0:
             return
         self._allocated[blocks] = False
+        self._dirty[blocks] = False
+        self._has_host[blocks] = False
         ids = jnp.asarray(blocks)
         slots = self.slot_of[ids]
         held = slots[slots >= 0]
         self.block_at = self.block_at.at[held].set(-1)
         self.slot_of = self.slot_of.at[ids].set(-1)
+        # a reused id must not inherit the old request's recency clock
+        self.last_use = self.last_use.at[ids].set(0)
 
     # -- residency ---------------------------------------------------------
     def resident_blocks(self) -> np.ndarray:
@@ -123,8 +134,10 @@ class PagedKVPool:
         ``needed`` — logical block ids every request in the step reads or
         writes (deduplicated here). Plans all page-ins co-issued with the
         evictions they displace via ``DuplexOffloadEngine`` and executes
-        them with a single fused ``duplex_kv_stream`` call. Returns the
-        step's paging counts.
+        them with a single fused ``duplex_kv_stream`` call. Brand-new
+        blocks (no host copy yet — about to receive their first ``write``)
+        are installed into slots directly: they carry no link traffic and
+        are not billed as page-ins. Returns the step's paging counts.
         """
         needed = np.unique(np.asarray(needed, np.int32))
         if needed.size > self.hbm_capacity:
@@ -136,12 +149,13 @@ class PagedKVPool:
         missing = needed[slot_of[needed] < 0]
         report = {"page_ins": 0, "page_outs": 0}
         if missing.size:
+            stale = missing[self._has_host[missing]]   # real page-ins
+            fresh = missing[~self._has_host[missing]]  # first installs
             free_slots = np.flatnonzero(np.asarray(self.block_at) < 0)
             n_evict = max(0, missing.size - free_slots.size)
             victims = self._pick_victims(n_evict, needed)
-            self._execute(missing, victims, free_slots[:missing.size])
-            report = {"page_ins": int(missing.size),
-                      "page_outs": int(victims.size)}
+            report = self._execute(stale, fresh, victims,
+                                   free_slots[:missing.size])
         self._touch(needed)
         return report
 
@@ -160,55 +174,88 @@ class PagedKVPool:
         order = cand[np.argsort(last_use[cand], kind="stable")]
         return order[:k].astype(np.int32)
 
-    def _execute(self, missing: np.ndarray, victims: np.ndarray,
-                 free_slots: np.ndarray) -> None:
+    def _execute(self, stale: np.ndarray, fresh: np.ndarray,
+                 victims: np.ndarray, free_slots: np.ndarray) -> dict:
+        """Make ``stale + fresh`` resident, evicting ``victims``.
+
+        Only real data moves: ``stale`` blocks (host copies from earlier
+        evictions) and *written* victims travel through the duplex plan +
+        fused kernel. ``fresh`` blocks are zero-installed, and victims
+        that never received a ``write()`` just drop residency — neither
+        carries modelled or billed traffic.
+        """
         victim_slots = np.asarray(self.slot_of)[victims]
+        outs = victims[self._dirty[victims]]       # real out traffic
+        out_slots = np.asarray(self.slot_of)[outs]
+        silent_slots = np.asarray(
+            self.slot_of)[victims[~self._dirty[victims]]]
         block_bytes = float(np.prod(self.block_shape) * 2)  # bf16
-        plan = self.engine.plan_kv_paging(
-            needed_host_blocks=missing.tolist(),
-            evict_hbm_blocks=victim_slots.tolist(),
-            free_hbm_blocks=free_slots.tolist(),
-            host_dst_blocks=victims.tolist(),
-            block_bytes=block_bytes)
-        serial = plan_serial(
-            [s.page_in for s in plan.slots if s.page_in],
-            [s.page_out for s in plan.slots if s.page_out],
-            self.engine.link)
-        self.stats["duplex_us"] += plan.modelled_time_us()
-        self.stats["serial_us"] += serial.modelled_time_us()
-        self.stats["page_ins"] += int(missing.size)
-        self.stats["page_outs"] += int(victims.size)
-        self.stats["kernel_calls"] += 1
+        if stale.size or outs.size:
+            plan = self.engine.plan_kv_paging(
+                needed_host_blocks=stale.tolist(),
+                evict_hbm_blocks=out_slots.tolist(),
+                free_hbm_blocks=np.concatenate(
+                    [free_slots, silent_slots]).tolist(),
+                host_dst_blocks=outs.tolist(),
+                block_bytes=block_bytes)
+            serial = plan_serial(
+                [s.page_in for s in plan.slots if s.page_in],
+                [s.page_out for s in plan.slots if s.page_out],
+                self.engine.link)
+            self.stats["duplex_us"] += plan.modelled_time_us()
+            self.stats["serial_us"] += serial.modelled_time_us()
+            self.stats["page_ins"] += int(stale.size)
+            self.stats["page_outs"] += int(outs.size)
+            self.stats["kernel_calls"] += 1
 
-        # ONE fused kernel pass over both streams, padded to a uniform grid.
-        m = max(missing.size, victims.size, 1)
-        T, D = self.block_shape
+            # ONE fused kernel pass over both streams, padded to a
+            # uniform grid.
+            m = max(stale.size, outs.size, 1)
+            T, D = self.block_shape
 
-        def pad(a, n):
-            if a.shape[0] == n:
-                return a
-            fill = jnp.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)
-            return jnp.concatenate([a, fill])
+            def pad(a, n):
+                if a.shape[0] == n:
+                    return a
+                fill = jnp.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)
+                return jnp.concatenate([a, fill])
 
-        in_q = pad(self.host_q[jnp.asarray(missing)], m)
-        in_scale = pad(self.host_scale[jnp.asarray(missing)], m)
-        out_x = (pad(self.hbm[jnp.asarray(victim_slots)], m)
-                 if victims.size else jnp.zeros((m, T, D), jnp.bfloat16))
-        in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
-            in_q, in_scale, out_x)
+            in_q = pad(self.host_q[jnp.asarray(stale)], m)
+            in_scale = pad(self.host_scale[jnp.asarray(stale)], m)
+            out_x = (pad(self.hbm[jnp.asarray(out_slots)], m)
+                     if outs.size
+                     else jnp.zeros((m, T, D), jnp.bfloat16))
+            in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
+                in_q, in_scale, out_x)
+
+            if outs.size:
+                o = jnp.asarray(outs)
+                self.host_q = self.host_q.at[o].set(out_q[:outs.size])
+                self.host_scale = self.host_scale.at[o].set(
+                    out_scale[:outs.size])
+                self._has_host[outs] = True
+                self._dirty[outs] = False   # host copy now matches
+        else:
+            in_deq = None
 
         if victims.size:
-            v = jnp.asarray(victims)
-            self.host_q = self.host_q.at[v].set(out_q[:victims.size])
-            self.host_scale = self.host_scale.at[v].set(
-                out_scale[:victims.size])
-            self.block_at = self.block_at.at[jnp.asarray(victim_slots)].set(-1)
-            self.slot_of = self.slot_of.at[v].set(-1)
+            self.block_at = self.block_at.at[
+                jnp.asarray(victim_slots)].set(-1)
+            self.slot_of = self.slot_of.at[jnp.asarray(victims)].set(-1)
+
+        # stale blocks take the leading dst slots (they consume in_deq);
+        # fresh blocks zero-fill the rest pending their first write.
+        missing = np.concatenate([stale, fresh]).astype(np.int32)
         dst = np.concatenate([free_slots, victim_slots])[:missing.size]
         dst_j, miss_j = jnp.asarray(dst), jnp.asarray(missing)
-        self.hbm = self.hbm.at[dst_j].set(in_deq[:missing.size])
+        if stale.size:
+            self.hbm = self.hbm.at[dst_j[:stale.size]].set(
+                in_deq[:stale.size])
+        if fresh.size:
+            self.hbm = self.hbm.at[dst_j[stale.size:]].set(
+                jnp.zeros((), jnp.bfloat16))
         self.slot_of = self.slot_of.at[miss_j].set(dst_j.astype(jnp.int32))
         self.block_at = self.block_at.at[dst_j].set(miss_j.astype(jnp.int32))
+        return {"page_ins": int(stale.size), "page_outs": int(outs.size)}
 
     def _touch(self, blocks: np.ndarray) -> None:
         self._clock += 1
@@ -229,6 +276,7 @@ class PagedKVPool:
             raise ValueError("write to non-resident block; call step() first")
         self.hbm = self.hbm.at[jnp.asarray(slots)].set(
             data.astype(jnp.bfloat16))
+        self._dirty[blocks] = True
         self._touch(blocks)
 
     def read(self, blocks) -> jnp.ndarray:

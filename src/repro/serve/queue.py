@@ -18,6 +18,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -151,10 +152,13 @@ class RequestQueue:
         obs, arrived = self._observe(now)
         self._state, w = self.policy.schedule(self.params, self._state, obs)
         w = np.asarray(w, np.float32)
-        # policy weight first, FIFO (arrival, submit order) as tie-break
+        # policy weight first, FIFO (arrival, submit order) as tie-break;
+        # rid is monotonic in submit order, unlike the waiting-room slot
+        # index, which gets recycled.
         order = sorted(
             np.flatnonzero(arrived).tolist(),
-            key=lambda i: (-w[i], self._slots[i].arrival_step, i))
+            key=lambda i: (-w[i], self._slots[i].arrival_step,
+                           self._slots[i].rid))
         take = order[:n_free]
         admitted = []
         moved_r = np.zeros((self.capacity,), np.float32)
@@ -171,4 +175,22 @@ class RequestQueue:
             moved_write=jnp.asarray(moved_w),
             utilization=jnp.float32(min(1.0, len(take) / max(n_free, 1))))
         self._state = self.policy.update(self.params, self._state, fb)
+        self._reset_slot_state(take)
         return admitted
+
+    def _reset_slot_state(self, idx: list[int]) -> None:
+        """Reinitialize per-slot policy state for vacated waiting slots —
+        a later request recycling the slot must not inherit the previous
+        occupant's vruntime/history."""
+        if not idx:
+            return
+        fresh = self.policy.init(self.params, self.capacity)
+        sel = jnp.asarray(np.asarray(idx, np.int32))
+
+        def reset(cur, f):
+            if (hasattr(cur, "ndim") and cur.ndim >= 1
+                    and cur.shape[0] == self.capacity):
+                return cur.at[sel].set(f[sel])
+            return cur
+
+        self._state = jax.tree.map(reset, self._state, fresh)

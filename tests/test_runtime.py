@@ -123,12 +123,15 @@ class TestServing:
     def test_batched_paging_duplexes(self):
         kv = OffloadedKVCache(n_blocks=32, hbm_blocks=8,
                               block_shape=(8, 16))
-        for b in range(8):
-            kv.touch([b])
+        for b in range(32):                  # fill + spill real data
+            kv.write_block(b, jnp.ones((8, 16)) * b)
         kv.stats = {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
                     "serial_us": 0.0}
-        for start in range(8, 32, 4):
+        for start in range(0, 24, 4):        # real ins co-issued with outs
             kv.touch(list(range(start, start + 4)))
+            for b in range(start, start + 4):     # rewrite -> dirty evict
+                kv.write_block(b, jnp.ones((8, 16)) * (b + 1))
+        assert kv.stats["page_ins"] > 0 and kv.stats["page_outs"] > 0
         assert kv.duplex_speedup() > 1.3
 
     def test_lru_eviction_order(self):

@@ -84,6 +84,31 @@ class TestContinuousBatching:
         for i, rid in enumerate(rids):
             np.testing.assert_array_equal(outs[rid], ref[i])
 
+    @pytest.mark.parametrize("arch", ["rwkv6-7b", "zamba2-7b"])
+    def test_recurrent_staggered_arrivals_exact(self, arch):
+        """Regression: prefill-only micro-steps (prefill_chunk > 1) must
+        not advance frozen DECODE rows' recurrent state (RWKV wkv/shifts,
+        hybrid Mamba state) with dummy tokens. Staggered arrivals and
+        unequal prompt lengths desynchronize the batch so decoding rows
+        coexist with chunk-prefilling rows."""
+        api = R.build(arch, smoke=True)
+        params = api.init(jax.random.PRNGKey(9))
+        lens = [3, 7, 5]
+        prompts = [np.asarray(jax.random.randint(
+            jax.random.PRNGKey(10 + i), (n,), 0, api.cfg.vocab), np.int32)
+            for i, n in enumerate(lens)]
+        refs = [np.asarray(reference_decode(
+            api, params, jnp.asarray(p)[None], 6, cache_len=32))[0]
+            for p in prompts]
+        eng = ServeEngine(api, params, EngineConfig(
+            max_batch=2, cache_len=32, prefill_chunk=3))
+        assert not eng.paged
+        rids = [eng.submit(p, 6, arrival_step=2 * i).rid
+                for i, p in enumerate(prompts)]
+        outs = eng.run(max_steps=200)
+        for rid, ref in zip(rids, refs):
+            np.testing.assert_array_equal(outs[rid], ref)
+
     def test_arrival_step_respected(self, api, params):
         eng = ServeEngine(api, params, _cfg())
         late = eng.submit(np.ones(4, np.int32), 2, arrival_step=5)
@@ -204,6 +229,35 @@ class TestAdmissionPolicy:
         assert set(r.rid for r in got) == {reqs[0].rid, reqs[1].rid}
         assert q.dispatch(now=0, n_free=4) == []      # last not arrived yet
         assert q.dispatch(now=3, n_free=4) == [reqs[2]]
+
+    def test_fifo_tiebreak_survives_slot_recycling(self):
+        """Equal-weight requests admit in submit order even after a
+        waiting-room slot is recycled by an earlier admission (threshold
+        is stateless, so identical requests really do tie)."""
+        q = RequestQueue(capacity=2, policy="threshold")
+        a = q.submit(Request(prompt=np.ones(4, np.int32), max_new_tokens=2))
+        b = q.submit(Request(prompt=np.ones(4, np.int32), max_new_tokens=2))
+        assert q.dispatch(now=0, n_free=1) == [a]
+        c = q.submit(Request(prompt=np.ones(4, np.int32),
+                             max_new_tokens=2))   # lands in a's old slot
+        assert q.dispatch(now=0, n_free=1) == [b]
+        assert q.dispatch(now=0, n_free=1) == [c]
+
+    def test_recycled_slot_inherits_no_policy_state(self):
+        """A request recycling a waiting slot must not inherit the
+        previous occupant's accumulated vruntime (hinted is stateful, so
+        a stale clock would push the recycler behind later arrivals)."""
+        q = RequestQueue(capacity=2, policy="hinted")
+
+        def mk():
+            return Request(prompt=np.ones(8, np.int32), max_new_tokens=4)
+
+        a = q.submit(mk())
+        assert q.dispatch(now=0, n_free=1) == [a]   # charges slot 0
+        c = q.submit(mk())                          # recycles slot 0
+        d = q.submit(mk())                          # fresh slot 1
+        assert q.dispatch(now=0, n_free=1) == [c]
+        assert q.dispatch(now=0, n_free=1) == [d]
 
     def test_queue_capacity_enforced(self):
         q = RequestQueue(capacity=1)
