@@ -15,6 +15,8 @@ byte volumes (active params + KV per layer).
 
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -75,25 +77,51 @@ def run() -> Bench:
     #    duplex engine on the actual request stream --------------------------
     api_s = R.build("smollm-135m", smoke=True)
     params = api_s.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(api_s, params,
-                      EngineConfig(max_batch=4, cache_len=64,
-                                   block_tokens=4, hbm_blocks=6,
-                                   prefill_chunk=2, max_queue=8))
-    key = jax.random.PRNGKey(1)
-    for i in range(6):
-        prompt = jax.random.randint(jax.random.fold_in(key, i), (6,), 0,
-                                    api_s.cfg.vocab)
-        eng.submit(np.asarray(prompt), 12, arrival_step=2 * i)
-    t0 = time.monotonic()         # time the serving loop, not build/init
-    outs = eng.run()
-    us = (time.monotonic() - t0) * 1e6
+    ecfg = EngineConfig(max_batch=4, cache_len=64, block_tokens=4,
+                        hbm_blocks=6, prefill_chunk=2, max_queue=8)
+
+    def _drive(eng: ServeEngine):
+        key = jax.random.PRNGKey(1)
+        for i in range(6):
+            prompt = jax.random.randint(jax.random.fold_in(key, i), (6,),
+                                        0, api_s.cfg.vocab)
+            eng.submit(np.asarray(prompt), 12, arrival_step=2 * i)
+        t0 = time.monotonic()     # time the serving loop, not build/init
+        outs = eng.run()
+        return outs, time.monotonic() - t0
+
+    # warmup: the first run compiles the fused step / paging / admission
+    # programs; they are cached per (ModelAPI, config) cell, so the
+    # measured engines below reuse them and the row reports steady-state
+    # serving throughput, not XLA compile time. Best-of-3 measured runs
+    # (the whole run is ~100ms; best-of de-noises shared-machine load).
+    _warm_outs, warm_dt = _drive(ServeEngine(api_s, params, ecfg))
+    best = None
+    for _ in range(3):
+        eng = ServeEngine(api_s, params, ecfg)
+        outs, dt = _drive(eng)
+        if best is None or dt < best[1]:
+            best = (eng, dt, outs)
+    eng, dt, outs = best
     st = eng.paging_stats()
     tokens = sum(len(v) for v in outs.values())
-    b.row("decode/kv-paging", us,
+    tok_s = tokens / dt
+    b.row("decode/kv-paging", dt * 1e6,
+          f"steady {tok_s:.0f} tok/s (warmup {warm_dt:.2f}s); "
           f"duplex_speedup={st['duplex_speedup']:.2f}x "
           f"({st['page_ins']} ins/{st['page_outs']} outs; "
           f"{st['kernel_calls']} kernel calls/{eng.step_count} steps; "
           f"{tokens} tok served)")
+
+    # the repo-root perf trajectory marker (CI diffs this against the
+    # committed baseline and warns on >20% regression)
+    bench_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              "..", "BENCH_serve.json")
+    with open(bench_path, "w") as f:
+        json.dump({"tokens_per_s": round(tok_s, 1),
+                   "steps": int(eng.step_count),
+                   "duplex_speedup": round(st["duplex_speedup"], 4)}, f)
+        f.write("\n")
 
     write_csv("fig6_llm.csv",
               ["phase", "cfs_gbps", "cxlaimpod_gbps", "improvement"],

@@ -76,6 +76,46 @@ def _specs(n_blocks: int, T: int, D: int):
     }
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def dequant_stream(in_q, in_scale, *, interpret: bool = False):
+    """Page-in-only half: dequantize arriving int8 pages to bf16.
+
+    Used stand-alone when a paging step has no evictions — no zero blocks
+    are streamed through a dead page-out half of the fused grid."""
+    N, T, D = in_q.shape
+    s = _specs(N, T, D)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(N,),
+        in_specs=[s["q"], s["scale"]],
+        out_specs=s["x"],
+        out_shape=jax.ShapeDtypeStruct((N, T, D), jnp.bfloat16),
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(in_q, in_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quant_stream(out_x, *, interpret: bool = False):
+    """Page-out-only half: quantize departing bf16 pages to int8 + scale.
+
+    Used stand-alone when a paging step has no page-ins."""
+    N, T, D = out_x.shape
+    s = _specs(N, T, D)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(N,),
+        in_specs=[s["x"]],
+        out_specs=[s["q"], s["scale"]],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, T, D), jnp.int8),
+            jax.ShapeDtypeStruct((N, T, 1), jnp.float32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(out_x)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "fused"))
 def duplex_kv_stream(in_q, in_scale, out_x, *, interpret: bool = False,
                      fused: bool = True):
@@ -86,8 +126,9 @@ def duplex_kv_stream(in_q, in_scale, out_x, *, interpret: bool = False,
     out_x: (N, T, D) bf16 pages being evicted to the host pool.
 
     Returns (in_deq (N,T,D) bf16, out_q (N,T,D) int8, out_scale (N,T,1) f32).
-    ``fused=False`` runs the phase-separated two-kernel baseline (identical
-    math; used for the §Perf A/B and in tests for equivalence).
+    ``fused=False`` runs the phase-separated two-kernel baseline — the
+    stand-alone dequant/quant halves back to back (identical math; used
+    for the §Perf A/B and in tests for equivalence).
     """
     N, T, D = in_q.shape
     s = _specs(N, T, D)
@@ -108,25 +149,6 @@ def duplex_kv_stream(in_q, in_scale, out_x, *, interpret: bool = False,
             interpret=interpret,
         )(in_q, in_scale, out_x)
 
-    in_deq = pl.pallas_call(
-        _dequant_kernel,
-        grid=(N,),
-        in_specs=[s["q"], s["scale"]],
-        out_specs=s["x"],
-        out_shape=jax.ShapeDtypeStruct((N, T, D), jnp.bfloat16),
-        compiler_params=dim_sem,
-        interpret=interpret,
-    )(in_q, in_scale)
-    out_q, out_scale = pl.pallas_call(
-        _quant_kernel,
-        grid=(N,),
-        in_specs=[s["x"]],
-        out_specs=[s["q"], s["scale"]],
-        out_shape=[
-            jax.ShapeDtypeStruct((N, T, D), jnp.int8),
-            jax.ShapeDtypeStruct((N, T, 1), jnp.float32),
-        ],
-        compiler_params=dim_sem,
-        interpret=interpret,
-    )(out_x)
+    in_deq = dequant_stream(in_q, in_scale, interpret=interpret)
+    out_q, out_scale = quant_stream(out_x, interpret=interpret)
     return in_deq, out_q, out_scale

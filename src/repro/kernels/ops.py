@@ -34,6 +34,20 @@ def duplex_kv_stream(in_q, in_scale, out_x, *, fused=True, interpret=None):
                                 interpret=interpret)
 
 
+def dequant_kv_stream(in_q, in_scale, *, interpret=None):
+    """Single-direction page-in transform (no page-out stream to fuse)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ds.dequant_stream(in_q, in_scale, interpret=interpret)
+
+
+def quant_kv_stream(out_x, *, interpret=None):
+    """Single-direction page-out transform (no page-in stream to fuse)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _ds.quant_stream(out_x, interpret=interpret)
+
+
 def wkv6(r, k, v, w, u, *, chunk=128, interpret=None):
     if interpret is None:
         interpret = _default_interpret()

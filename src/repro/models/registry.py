@@ -67,6 +67,17 @@ class ModelAPI(NamedTuple):
     # stale entry before it is read); "recurrent": the cache carries state
     # that any decode_step advances irreversibly (RWKV wkv/shifts, Mamba).
     cache_kind: str = "ring"
+    # Serving donation / multi-step contract: ``decode_step`` must be a
+    # pure function of (params, cache, tokens, pos) — safe to (a) invoke
+    # repeatedly inside one jitted ``lax.scan``/``lax.cond`` (the engine's
+    # fused step loop runs prefill_chunk micro-steps in one XLA program
+    # with on-device argmax feedback) and (b) have its cache argument
+    # buffer-donated, i.e. the returned cache may alias the input's
+    # buffers and the caller rebinds (``jax.jit(decode_step,
+    # donate_argnums=(1,))``). Every registry family satisfies this; an
+    # arch that cannot (host callbacks, per-call RNG, external cache
+    # aliasing) must set it False and ``ServeEngine`` will refuse it.
+    fused_decode: bool = True
 
 
 def runnable(arch_id: str, shape: str) -> bool:

@@ -62,8 +62,9 @@ class OffloadedKVCache:
     # -- legacy views ------------------------------------------------------
     @property
     def resident(self) -> dict[int, int]:
-        """logical block -> HBM slot, as the old dict view."""
-        slot_of = np.asarray(self.pool.slot_of)
+        """logical block -> HBM slot, as the old dict view (the pool's
+        block table is host numpy — no device round-trip here)."""
+        slot_of = self.pool.slot_of
         return {int(b): int(slot_of[b])
                 for b in np.flatnonzero(slot_of >= 0)}
 
@@ -71,7 +72,7 @@ class OffloadedKVCache:
     def lru(self) -> list[int]:
         """Resident blocks, least-recently-used first."""
         res = self.pool.resident_blocks()
-        clocks = np.asarray(self.pool.last_use)[res]
+        clocks = self.pool.last_use[res]
         return res[np.argsort(clocks, kind="stable")].tolist()
 
     @property

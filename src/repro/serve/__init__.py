@@ -8,8 +8,11 @@ The serving stack, layered (see README.md):
                   LRU-clock arrays); page-in/page-out sets planned batched
                   across all requests per step by ``DuplexOffloadEngine``;
   ServeEngine   — the step loop: per-request arrival/completion, chunked
-                  prefill, block write-through, one ``duplex_kv_stream``
-                  kernel invocation per step for the whole batch's traffic.
+                  prefill, block write-through, one stream-kernel
+                  invocation per step for the whole batch's traffic. The
+                  token loop itself is ONE jitted, buffer-donated XLA
+                  program per step (device-resident slot state, on-device
+                  argmax feedback, a single packed completion readback).
 """
 
 from repro.serve.engine import EngineConfig, ServeEngine, reference_decode

@@ -6,16 +6,32 @@ The step loop (``ServeEngine.step``) replaces the old static
   1. **admission** — free batch slots are offered to the ``RequestQueue``;
      the queue's ``core.policies`` policy picks which arrived prefills join
      the running batch (the scheduler stack serving real traffic);
-  2. **micro-steps** — one batched ``decode_step`` advances every active
-     slot by one token (prompt token while prefilling, last sampled token
-     while decoding); up to ``prefill_chunk - 1`` extra micro-steps advance
-     only the prefilling slots, so long prompts stream in chunks without
-     stalling running decodes;
+  2. **fused micro-steps** — ONE jitted, buffer-donated XLA program runs
+     the whole step's token loop on device: up to ``prefill_chunk``
+     micro-steps advance every active slot (prompt token while prefilling,
+     last sampled token while decoding) inside a ``lax.scan``, with the
+     argmax of each micro-step's logits fed straight back into the next
+     micro-step on device. The host syncs exactly once per engine step —
+     a single packed (B, 4) readback of per-slot (state, consumed, n_gen,
+     newest token) — to learn completions and drive paging;
   3. **KV paging** — freshly filled KV blocks are written through to the
      ``PagedKVPool`` and the whole batch's block demand for the step is
      made resident in ONE pool transaction: one ``DuplexOffloadEngine``
      plan, one fused ``duplex_kv_stream`` kernel invocation, regardless of
      how many requests page.
+
+Device-resident slot state: everything the micro-step loop reads lives in
+int32 device arrays (``_dev``): per-slot state code (EMPTY/PREFILL/DECODE/
+DONE), current feed token, consumed/generated counters, prompt length and
+budget, and a fixed-width per-slot prompt buffer. ``Request`` objects are
+host *mirrors*, refreshed from the once-per-step packed (B, 4) readback
+(``Request.sync_from_device`` — a row emits at most one token per step,
+so state | consumed | n_gen | newest-token is the complete delta). Admission writes slot rows
+through two fused, donated programs (``_admit_rows`` for the state arrays,
+``_reset_rows`` for the pristine cache rows) — no per-leaf dispatches, no
+retracing across steps or engines: the compiled step program is cached
+per ``(ModelAPI, prefill_chunk)`` and shared by every engine with that
+shape, and caches are buffer-donated throughout so HBM holds one copy.
 
 Correctness contract: the dense per-slot cache is the HBM working set the
 model attends over, so generation is exact — a request decodes
@@ -33,25 +49,29 @@ already safe: the dummy K/V lands at the frozen row's *next* write
 position and is overwritten by that row's next real token before any real
 query attends it. Recurrent families (RWKV wkv/shift state, hybrid Mamba
 state) are different — their state is irreversibly advanced by any token
-they see — so for non-ring caches each micro-step restores the live
-frozen rows' leaves from the pre-step cache (a per-row ``jnp.where``
-select; empty and DONE rows are instead wiped by ``_reset_slot`` on
-admission). Either way frozen rows never contaminate generation.
+they see — so for non-ring caches each micro-step keeps every non-mover
+row's leaves from the pre-micro-step cache (a per-row masked select fused
+*inside* the jitted step; no whole-cache copies, no host sync). A
+prefill-only micro-step with no movers at all skips the model entirely
+via ``lax.cond``. Either way frozen rows never contaminate generation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.core.hints import HintTree, default_serving_hints
 from repro.models.registry import ModelAPI
 from repro.serve.kv_pool import PagedKVPool
-from repro.serve.queue import (DECODE, DONE, PREFILL, Request, RequestQueue)
+from repro.serve.queue import (DECODE, DONE, PREFILL, Request, RequestQueue,
+                               S_DECODE, S_DONE, S_EMPTY, S_PREFILL)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -83,30 +103,174 @@ def _kv_cache_leaves(cache):
     return None
 
 
-def _extract_blocks(cache, slot_idx, t0, block_tokens: int) -> jnp.ndarray:
-    """Gather KV blocks from the dense cache, batched over (slot, t0) pairs.
+# ---------------------------------------------------------------------------
+# jitted engine programs (module-level: engines sharing a (ModelAPI, config)
+# cell share one compiled program; buffers are donated where the caller
+# rebinds them, so HBM holds one cache, not two)
+# ---------------------------------------------------------------------------
 
-    cache["k"/"v"]: (L, B, W, KV, hd). Returns (n, block_tokens, kv_dims)
-    bf16 slabs with kv_dims = L * 2 * KV * hd — the block-table-indexed
-    read the pool pages.
-    """
-    W = cache["k"].shape[2]
-    pos = (np.asarray(t0, np.int64)[:, None]
-           + np.arange(block_tokens)[None, :]) % W          # (n, bt)
-    idx = jnp.asarray(pos, jnp.int32)
-    sl = jnp.asarray(np.asarray(slot_idx, np.int32))
+def _row_mask(mask, leaf):
+    """Broadcast a (B,) slot mask over a (L, B, ...) cache leaf."""
+    return mask.reshape((1, -1) + (1,) * (leaf.ndim - 2))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _reset_rows(cache, cache0, mask):
+    """Restore pristine init rows for slots in ``mask`` — every cache
+    family (attention K/V/pos rings, RWKV/Mamba recurrent state) stacks
+    layers first, batch second. One fused program for the whole tree, not
+    one dispatch per cache leaf; the old cache buffer is donated."""
+    return jax.tree.map(
+        lambda leaf, leaf0: jnp.where(_row_mask(mask, leaf), leaf0, leaf),
+        cache, cache0)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _admit_rows(dev, mask, prompts, prompt_len, max_new):
+    """Install admitted requests into their slots' device-resident state
+    rows (fixed-width: ``mask``/``prompts`` always span the full batch, so
+    admission never retraces on how many requests arrived)."""
+    zero = jnp.int32(0)
+
+    def sc(cur, new):
+        return jnp.where(mask, new, cur)
+
+    return {
+        "state": sc(dev["state"], jnp.int32(S_PREFILL)),
+        "tok": sc(dev["tok"], prompts[:, 0]),
+        "consumed": sc(dev["consumed"], zero),
+        "n_gen": sc(dev["n_gen"], zero),
+        "prompt_len": sc(dev["prompt_len"], prompt_len),
+        "max_new": sc(dev["max_new"], max_new),
+        "prompt": jnp.where(mask[:, None], prompts, dev["prompt"]),
+    }
+
+
+@functools.partial(jax.jit, static_argnames=("block_tokens",))
+def _extract_blocks_impl(k, v, slot_idx, t0, *, block_tokens: int):
+    """Gather KV blocks from the dense cache, batched over (slot, t0).
+
+    k/v: (L, B, W, KV, hd). slot_idx/t0: (n,) int32 — the engine always
+    passes a fixed-width (hbm_capacity) vector padded with dummy entries,
+    so write-through never retraces on the number of freshly filled
+    blocks. Returns (n, block_tokens, kv_dims) bf16 slabs with
+    kv_dims = L * 2 * KV * hd — the block-table-indexed read the pool
+    pages."""
+    W = k.shape[2]
+    idx = ((t0[:, None] + jnp.arange(block_tokens)[None, :]) % W
+           ).astype(jnp.int32)
 
     def take(arr):
-        a = jnp.moveaxis(arr, 1, 0)[sl]                     # (n, L, W, KV, hd)
+        a = jnp.moveaxis(arr, 1, 0)[slot_idx]               # (n, L, W, KV, hd)
         ix = idx[:, None, :, None, None]
         ix = jnp.broadcast_to(
             ix, a.shape[:2] + (block_tokens,) + a.shape[3:])
         return jnp.take_along_axis(a, ix, axis=2)           # (n, L, bt, KV, hd)
 
-    kv = jnp.stack([take(cache["k"]), take(cache["v"])], axis=2)
+    kv = jnp.stack([take(k), take(v)], axis=2)
     kv = jnp.moveaxis(kv, 3, 1)                             # (n, bt, L, 2, KV, hd)
     n = kv.shape[0]
     return kv.reshape(n, block_tokens, -1).astype(jnp.bfloat16)
+
+
+def _extract_blocks(cache, slot_idx, t0, block_tokens: int) -> jnp.ndarray:
+    """Compat wrapper over ``_extract_blocks_impl`` accepting the cache
+    dict and python index lists (tests use it; the engine calls the jitted
+    impl with fixed-width device vectors directly)."""
+    return _extract_blocks_impl(
+        cache["k"], cache["v"],
+        jnp.asarray(np.asarray(slot_idx, np.int32)),
+        jnp.asarray(np.asarray(t0, np.int32)),
+        block_tokens=block_tokens)
+
+
+@functools.lru_cache(maxsize=32)
+def _fused_step_program(api: ModelAPI, n_micro: int):
+    """Build the engine-step program: one jitted, buffer-donated XLA
+    program running up to ``n_micro`` micro-steps as a ``lax.scan`` with
+    on-device argmax feedback.
+
+    Cached per (ModelAPI, prefill_chunk): every engine sharing that cell
+    reuses the compiled program (warm restarts, A/B engines, the
+    benchmark's warmup engine). Donating ``cache`` and the slot-state
+    arrays means the step updates in place — HBM holds one cache.
+
+    Returns ``fn(params, cache, dev) -> (cache, dev, packed)`` where
+    ``packed`` is the (B, 4) int32 completion readback
+    (state | consumed | n_gen | newest token) — the step's single
+    device->host sync reads exactly this one small array. A row emits at
+    most one token per engine step (decode rows move only at micro-step
+    0; a prefill row emits once, on its transition), so the newest token
+    plus the n_gen counter is enough for the host mirror to append.
+    """
+    ring = api.cache_kind == "ring"
+    n_micro = max(1, n_micro)
+
+    def step(params, cache, dev):
+        B = dev["state"].shape[0]
+        P = dev["prompt"].shape[1]
+        brange = jnp.arange(B)
+
+        def micro(carry, m):
+            cache, dev = carry
+            prefilling = dev["state"] == S_PREFILL
+            decoding = dev["state"] == S_DECODE
+            # micro-step 0 advances every live row; later micro-steps only
+            # the still-prefilling rows (chunked prefill without stalling
+            # running decodes).
+            movers = prefilling | (decoding & (m == 0))
+            written = jnp.where(
+                prefilling, dev["consumed"],
+                jnp.maximum(dev["consumed"] + dev["n_gen"] - 1, 0))
+            toks = jnp.where(movers, dev["tok"], 0)
+
+            def advance(c):
+                logits, new_cache = api.decode_step(params, c, toks,
+                                                    written)
+                if not ring:
+                    # Recurrent state (RWKV wkv/shifts, Mamba) is
+                    # irreversibly advanced by any token it sees: keep
+                    # every non-mover row's pre-step leaves. Ring caches
+                    # skip this — the dummy entry is overwritten before
+                    # it is ever attended.
+                    new_cache = jax.tree.map(
+                        lambda new, old: jnp.where(
+                            _row_mask(movers, new), new, old),
+                        new_cache, c)
+                picked = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return new_cache, picked
+
+            # a micro-step with no movers (every live row already decoded
+            # this step) skips the model entirely.
+            cache, picked = lax.cond(
+                movers.any(), advance,
+                lambda c: (c, jnp.zeros((B,), jnp.int32)), cache)
+
+            pref_mover = movers & prefilling
+            consumed = dev["consumed"] + pref_mover.astype(jnp.int32)
+            fin_pref = pref_mover & (consumed == dev["prompt_len"])
+            emit = (movers & decoding) | fin_pref
+            n_gen = dev["n_gen"] + emit.astype(jnp.int32)
+            state = jnp.where(fin_pref, S_DECODE, dev["state"])
+            state = jnp.where(emit & (n_gen >= dev["max_new"]),
+                              S_DONE, state)
+            nxt = dev["prompt"][brange, jnp.minimum(consumed, P - 1)]
+            tok = jnp.where(
+                movers, jnp.where(state == S_PREFILL, nxt, picked),
+                dev["tok"])
+            dev = dict(dev, state=state, tok=tok, consumed=consumed,
+                       n_gen=n_gen)
+            return (cache, dev), None
+
+        (cache, dev), _ = lax.scan(micro, (cache, dev),
+                                   jnp.arange(n_micro))
+        # after an emitting micro-step, ``tok`` is exactly the emitted
+        # sample (decode feedback), so it doubles as the newest token.
+        packed = jnp.stack([dev["state"], dev["consumed"],
+                            dev["n_gen"], dev["tok"]], axis=1)
+        return cache, dev, packed
+
+    return jax.jit(step, donate_argnums=(1, 2))
 
 
 class ServeEngine:
@@ -114,21 +278,39 @@ class ServeEngine:
 
     def __init__(self, api: ModelAPI, params, cfg: EngineConfig,
                  hints: HintTree | None = None):
+        if not getattr(api, "fused_decode", True):
+            raise ValueError(
+                f"{api.arch_id}: ModelAPI.fused_decode is False — its "
+                "decode_step does not satisfy the fused step-loop "
+                "contract (pure, scan-safe, cache-donatable); the engine "
+                "cannot serve it")
         self.api = api
         self.params = params
         self.cfg = cfg
         self.hints = hints or default_serving_hints()
-        self._step_fn = jax.jit(api.decode_step)
+        self._step_fn = _fused_step_program(api, cfg.prefill_chunk)
         self.cache = api.init_cache(cfg.max_batch, cfg.cache_len)
-        self._cache0 = self.cache   # pristine rows for slot recycling
+        # pristine rows for slot recycling — a *separate* allocation: the
+        # live cache's buffers are donated every step.
+        self._cache0 = api.init_cache(cfg.max_batch, cfg.cache_len)
         self.slots: list[Request | None] = [None] * cfg.max_batch
+        B = cfg.max_batch
+        self._dev = {
+            "state": jnp.full((B,), S_EMPTY, jnp.int32),
+            "tok": jnp.zeros((B,), jnp.int32),
+            "consumed": jnp.zeros((B,), jnp.int32),
+            "n_gen": jnp.zeros((B,), jnp.int32),
+            "prompt_len": jnp.zeros((B,), jnp.int32),
+            "max_new": jnp.zeros((B,), jnp.int32),
+            "prompt": jnp.zeros((B, cfg.cache_len), jnp.int32),
+        }
 
         kv = _kv_cache_leaves(self.cache)
         # Token-indexed ring caches (declared per-arch on ModelAPI)
         # overwrite a frozen row's dummy K/V before it is ever attended;
-        # recurrent families need the frozen-row restore (see module
-        # docstring). Paging additionally needs the extractable top-level
-        # transformer K/V layout.
+        # recurrent families get the in-program frozen-row keep (see
+        # module docstring). Paging additionally needs the extractable
+        # top-level transformer K/V layout.
         self._ring_cache = api.cache_kind == "ring"
         self.paged = cfg.paging and kv is not None
         if self.paged:
@@ -163,6 +345,21 @@ class ServeEngine:
             raise ValueError(
                 f"request needs {total} cache positions but cache_len is "
                 f"{self.cfg.cache_len}")
+        if self.paged:
+            # write-through capacity check at submit time, not mid-step:
+            # one engine step prefills up to prefill_chunk tokens, so a
+            # single request can newly fill at most ceil(chunk/bt) blocks
+            # per step — all of which must fit the pool's HBM for the
+            # write-through.
+            bt = self.cfg.block_tokens
+            chunk = max(1, self.cfg.prefill_chunk)
+            worst = min(math.ceil(total / bt), math.ceil(chunk / bt))
+            if worst > self.cfg.hbm_blocks:
+                raise ValueError(
+                    f"request can fill {worst} KV blocks in one engine "
+                    f"step but the pool holds {self.cfg.hbm_blocks} HBM "
+                    f"blocks; grow hbm_blocks or shrink prefill_chunk/"
+                    f"block_tokens")
         return self.queue.submit(req)
 
     def active(self) -> list[Request]:
@@ -191,33 +388,84 @@ class ServeEngine:
                 break
             self.step()
         if self.pending():
-            raise RuntimeError(f"requests still pending after {limit} steps")
+            stuck = sorted([r.rid for r in self.queue.waiting()]
+                           + [r.rid for r in self.active()])
+            raise RuntimeError(
+                f"requests still pending after {limit} steps: "
+                f"rids {stuck}")
         return {rid: np.asarray(r.generated, np.int32)
                 for rid, r in sorted(self.completed.items())}
 
     # -- phase 1: admission -------------------------------------------------
+    def _worst_step_blocks(self, prompt_len: int, max_new: int,
+                           prefilling: bool) -> int:
+        """Worst-case KV blocks one request can newly fill in one engine
+        step: a prefilling row consumes up to prefill_chunk tokens
+        (capped by its total), a decoding row writes one token per step
+        and so crosses at most one block boundary."""
+        if not prefilling:
+            return 1
+        bt = self.cfg.block_tokens
+        chunk = max(1, self.cfg.prefill_chunk)
+        return min(math.ceil((prompt_len + max_new) / bt),
+                   math.ceil(chunk / bt))
+
+    def _admission_budget(self, now: int, n_free: int) -> int:
+        """Cap admissions on write-through headroom: the whole batch's
+        worst-case newly filled blocks per step must fit the pool's HBM,
+        so the mid-step overflow is unreachable — joint prefill demand
+        throttles at admission instead of raising in ``_page_kv``.
+        Requests left waiting are retried as running rows retire."""
+        if not self.paged:
+            return n_free
+        running = sum(
+            self._worst_step_blocks(r.prompt_len, r.max_new_tokens,
+                                    r.state == PREFILL)
+            for r in self.active())
+        headroom = self.pool.hbm_capacity - running
+        arrived = self.queue.waiting(now)
+        if not arrived or headroom < 1:
+            return 0 if arrived else n_free
+        # conservative per-admission cost: the largest worst-case among
+        # the requests the policy could pick (each is <= hbm_blocks by
+        # the submit-time guard).
+        per_adm = max(self._worst_step_blocks(r.prompt_len,
+                                              r.max_new_tokens, True)
+                      for r in arrived)
+        return min(n_free, headroom // per_adm)
+
     def _admit(self, now: int) -> int:
         free = [i for i, r in enumerate(self.slots) if r is None]
         if not free:
             return 0
-        admitted = self.queue.dispatch(now, len(free))
+        budget = self._admission_budget(now, len(free))
+        if budget <= 0:
+            return 0
+        admitted = self.queue.dispatch(now, budget)
+        if not admitted:
+            return 0
+        B = self.cfg.max_batch
+        P = self.cfg.cache_len
+        mask = np.zeros((B,), bool)
+        prompts = np.zeros((B, P), np.int32)
+        plen = np.zeros((B,), np.int32)
+        mnew = np.zeros((B,), np.int32)
         for req in admitted:
             slot = free.pop(0)
             req.slot = slot
             self.slots[slot] = req
-            self._reset_slot(slot)
             self._scan_cursor[req.rid] = 0
+            mask[slot] = True
+            prompts[slot, :req.prompt_len] = req.prompt
+            plen[slot] = req.prompt_len
+            mnew[slot] = req.max_new_tokens
+        m = jnp.asarray(mask)
+        self.cache = _reset_rows(self.cache, self._cache0, m)
+        self._dev = _admit_rows(self._dev, m, jnp.asarray(prompts),
+                                jnp.asarray(plen), jnp.asarray(mnew))
         return len(admitted)
 
-    def _reset_slot(self, slot: int) -> None:
-        """Retire the previous occupant's cache rows by restoring the
-        pristine init state (every cache family — attention K/V/pos rings,
-        RWKV/Mamba recurrent state — stacks layers first, batch second)."""
-        self.cache = jax.tree.map(
-            lambda leaf, leaf0: leaf.at[:, slot].set(leaf0[:, slot]),
-            self.cache, self._cache0)
-
-    # -- phase 2: token micro-steps -----------------------------------------
+    # -- phase 2: fused token micro-steps -----------------------------------
     def _written(self, r: Request) -> int:
         """Tokens whose KV is actually in the dense cache: all consumed
         prompt tokens, plus every generated token that has been fed back
@@ -227,58 +475,32 @@ class ServeEngine:
             return r.consumed
         return r.consumed + len(r.generated) - 1
 
+    def _readback(self, packed) -> np.ndarray:
+        """The step's single device->host sync: one packed (B, 4) int32
+        array of per-slot (state | consumed | n_gen | newest token)."""
+        return np.asarray(packed)
+
     def _advance_tokens(self) -> int:
-        if not self.active():
+        live = self.active()
+        if not live:
             return 0
+        before = {r.rid: (r.consumed + len(r.generated),
+                          r.state == PREFILL) for r in live}
+        self.cache, self._dev, packed = self._step_fn(
+            self.params, self.cache, self._dev)
+        rb = self._readback(packed)
         advanced = 0
-        for micro in range(max(1, self.cfg.prefill_chunk)):
-            movers = [r for r in self.active()
-                      if not (r.state == DONE)
-                      and (micro == 0 or r.state == PREFILL)]
-            if not movers:
-                break
-            tokens = np.zeros((self.cfg.max_batch,), np.int32)
-            pos = np.zeros((self.cfg.max_batch,), np.int32)
-            frozen = np.zeros((self.cfg.max_batch,), bool)
-            for i, r in enumerate(self.slots):
-                if r is None:
-                    continue
-                pos[i] = self._written(r)
-                if r in movers:
-                    tokens[i] = (r.prompt[r.consumed] if r.state == PREFILL
-                                 else r.generated[-1])
-                elif r.state != DONE:
-                    frozen[i] = True
-            prev_cache = self.cache
-            logits, self.cache = self._step_fn(
-                self.params, self.cache, jnp.asarray(tokens),
-                jnp.asarray(pos))
-            if frozen.any() and not self._ring_cache:
-                # Live frozen rows (DECODE during a prefill-only
-                # micro-step) must keep their pre-step cache: recurrent
-                # state (RWKV wkv/shifts, Mamba) is irreversibly advanced
-                # by the dummy token otherwise. Ring caches skip this —
-                # the dummy entry is overwritten before it is read — as
-                # do empty and DONE rows, wiped by _reset_slot on
-                # admission.
-                sel = jnp.asarray(~frozen)
-                self.cache = jax.tree.map(
-                    lambda new, old: jnp.where(
-                        sel.reshape((1, -1) + (1,) * (new.ndim - 2)),
-                        new, old),
-                    self.cache, prev_cache)
-            picked = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-            for r in movers:
-                advanced += 1
-                if r.state == PREFILL:
-                    r.consumed += 1
-                    if r.consumed == r.prompt_len:
-                        r.state = DECODE
-                        r.generated.append(int(picked[r.slot]))
-                else:
-                    r.generated.append(int(picked[r.slot]))
-                if r.state == DECODE and r.finished:
-                    r.state = DONE
+        for r in live:
+            row = rb[r.slot]
+            r.sync_from_device(int(row[0]), int(row[1]), int(row[2]),
+                               int(row[3]))
+            prev_total, was_prefill = before[r.rid]
+            advanced += (r.consumed + len(r.generated)) - prev_total
+            if was_prefill and r.state != PREFILL:
+                # the prefill->decode transition micro-step both consumes
+                # the last prompt token and emits the first sample — one
+                # micro-step, not two.
+                advanced -= 1
         return advanced
 
     # -- phase 3: batched KV paging -----------------------------------------
@@ -310,10 +532,21 @@ class ServeEngine:
         report = self.pool.step(needed)
 
         if new_pairs:
-            slot_idx = [r.slot for r, _ in new_pairs]
-            t0 = [bi * bt for _, bi in new_pairs]
-            data = _extract_blocks(self.cache, slot_idx, t0, bt)
-            self.pool.write([r.blocks[bi] for r, bi in new_pairs], data)
+            # fixed-width (hbm_capacity) extraction + write: padding rows
+            # carry an out-of-range sentinel id the pool's scatter drops,
+            # so neither program retraces on the per-step block count.
+            W = self.pool.hbm_capacity
+            slot_idx = np.zeros((W,), np.int32)
+            t0 = np.zeros((W,), np.int32)
+            ids = np.full((W,), self.pool.n_blocks, np.int32)
+            for j, (r, bi) in enumerate(new_pairs):
+                slot_idx[j] = r.slot
+                t0[j] = bi * bt
+                ids[j] = r.blocks[bi]
+            data = _extract_blocks_impl(
+                self.cache["k"], self.cache["v"], jnp.asarray(slot_idx),
+                jnp.asarray(t0), block_tokens=bt)
+            self.pool.write(ids, data)
         return report
 
     def _block_demand(self, live: list[Request]
@@ -380,9 +613,11 @@ class ServeEngine:
 def reference_decode(api: ModelAPI, params, prompts: jnp.ndarray,
                      num_tokens: int, cache_len: int = 128) -> jnp.ndarray:
     """Static-batch greedy decode — the token-for-token oracle the engine
-    is tested against. prompts: (B, P) int32; returns (B, num_tokens)."""
+    is tested against. prompts: (B, P) int32; returns (B, num_tokens).
+    The cache buffer is donated through every step (the ModelAPI
+    donation contract), matching the engine's memory behavior."""
     B, P = prompts.shape
-    step = jax.jit(api.decode_step)
+    step = jax.jit(api.decode_step, donate_argnums=(1,))
     cache = api.init_cache(B, cache_len)
     logits = None
     for t in range(P):

@@ -4,14 +4,21 @@ Replaces the per-request ``OffloadedKVCache`` (Python ``dict``/``list`` LRU,
 per-block ``.at[].set`` updates) with one pool shared by every request in
 the batch:
 
-  * residency, the slot map, and last-use clocks are jnp int32 arrays
-    (``slot_of``, ``block_at``, ``last_use``) — eviction choice is one
-    ``argsort`` over the clock array, not a Python list walk;
+  * residency, the slot map, and last-use clocks are **host numpy** arrays
+    (``slot_of``, ``block_at``, ``last_use``) — they never participate in
+    device compute, and every consumer (victim picking, invariant checks,
+    the engine's write-through) reads them on the host, so keeping them in
+    HBM only bought a device scatter per ``touch``/``free`` plus an
+    ``np.asarray`` round-trip per read. Eviction choice is one ``argsort``
+    over the clock array;
   * ``step(needed)`` ensures residency for the whole batch's block demand in
     one shot: ONE ``DuplexOffloadEngine`` plan co-issuing every page-in with
-    the evictions it displaces, and ONE fused ``duplex_kv_stream`` kernel
-    invocation for all of the step's traffic (dequantizing arrivals while
-    quantizing departures — both DMA directions busy);
+    the evictions it displaces, and ONE kernel invocation for all of the
+    step's traffic — the fused ``duplex_kv_stream`` when both directions
+    carry blocks (dequantizing arrivals while quantizing departures — both
+    DMA directions busy), or the single-direction dequant-only /
+    quant-only Pallas half when one stream is empty (no zero-block padding,
+    no dead half of the fused grid; stats billing is identical);
   * HBM writes/reads are batched scatters/gathers over block id arrays.
 
 Cold blocks live int8-quantized in the host pool (2x link-byte compression
@@ -22,6 +29,9 @@ execution is real; timing is modelled per the channel model).
 
 from __future__ import annotations
 
+import functools
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -34,6 +44,60 @@ from repro.kernels import ops as kernel_ops
 def _fresh_stats() -> dict:
     return {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
             "serial_us": 0.0, "kernel_calls": 0, "steps": 0}
+
+
+# ---------------------------------------------------------------------------
+# jitted data-plane programs — the per-step gather/commit halves around the
+# (eagerly invoked, test-countable) stream kernel. Each is one dispatch
+# instead of one per array; shapes are static per (n_in, n_out, n_fresh)
+# so the handful of combos a serving run produces each compile once.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _gather_duplex(host_q, host_scale, hbm, stale_ids, out_slot_ids):
+    """Both directions busy: gather + pad both streams to a uniform grid
+    for the fused kernel in one program."""
+    m = max(stale_ids.shape[0], out_slot_ids.shape[0])
+
+    def pad(a):
+        if a.shape[0] == m:
+            return a
+        fill = jnp.zeros((m - a.shape[0],) + a.shape[1:], a.dtype)
+        return jnp.concatenate([a, fill])
+
+    return (pad(host_q[stale_ids]), pad(host_scale[stale_ids]),
+            pad(hbm[out_slot_ids]))
+
+
+@jax.jit
+def _gather_in(host_q, host_scale, stale_ids):
+    return host_q[stale_ids], host_scale[stale_ids]
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _commit_paging(hbm, host_q, host_scale, in_deq, out_q, out_scale,
+                   out_ids, dst_stale, dst_fresh):
+    """Apply one paging step's results: spill quantized departures to the
+    host tier, install dequantized arrivals, zero-fill fresh installs.
+    ``in_deq``/``out_q``/``out_scale`` are None on the empty direction;
+    the live tier buffers are donated (one HBM copy, not two)."""
+    n_out = out_ids.shape[0]
+    if n_out:
+        host_q = host_q.at[out_ids].set(out_q[:n_out])
+        host_scale = host_scale.at[out_ids].set(out_scale[:n_out])
+    n_stale = dst_stale.shape[0]
+    if n_stale:
+        hbm = hbm.at[dst_stale].set(in_deq[:n_stale])
+    if dst_fresh.shape[0]:
+        hbm = hbm.at[dst_fresh].set(jnp.zeros((), jnp.bfloat16))
+    return hbm, host_q, host_scale
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_blocks(hbm, dst, data):
+    """Fixed-width write-through scatter; out-of-range dst rows (padding
+    sentinels) are dropped."""
+    return hbm.at[dst].set(data.astype(jnp.bfloat16), mode="drop")
 
 
 class PagedKVPool:
@@ -56,10 +120,11 @@ class PagedKVPool:
         self.host_q = jnp.zeros((n_blocks,) + self.block_shape, jnp.int8)
         self.host_scale = jnp.ones((n_blocks, self.block_shape[0], 1),
                                    jnp.float32)
-        # block table (the vectorized residency metadata):
-        self.slot_of = -jnp.ones((n_blocks,), jnp.int32)   # block -> slot
-        self.block_at = -jnp.ones((hbm_blocks,), jnp.int32)  # slot -> block
-        self.last_use = jnp.zeros((n_blocks,), jnp.int32)  # LRU clock
+        # block table (host-resident residency metadata — never feeds
+        # device compute, so it lives in numpy):
+        self.slot_of = np.full((n_blocks,), -1, np.int32)    # block -> slot
+        self.block_at = np.full((hbm_blocks,), -1, np.int32)  # slot -> block
+        self.last_use = np.zeros((n_blocks,), np.int64)      # LRU clock
         self._clock = 0
         self._allocated = np.zeros((n_blocks,), bool)
         # blocks whose HBM copy is newer than host_q (dirty after write(),
@@ -92,25 +157,23 @@ class PagedKVPool:
         self._allocated[blocks] = False
         self._dirty[blocks] = False
         self._has_host[blocks] = False
-        ids = jnp.asarray(blocks)
-        slots = self.slot_of[ids]
-        held = slots[slots >= 0]
-        self.block_at = self.block_at.at[held].set(-1)
-        self.slot_of = self.slot_of.at[ids].set(-1)
+        slots = self.slot_of[blocks]
+        self.block_at[slots[slots >= 0]] = -1
+        self.slot_of[blocks] = -1
         # a reused id must not inherit the old request's recency clock
-        self.last_use = self.last_use.at[ids].set(0)
+        self.last_use[blocks] = 0
 
     # -- residency ---------------------------------------------------------
     def resident_blocks(self) -> np.ndarray:
-        return np.flatnonzero(np.asarray(self.slot_of) >= 0)
+        return np.flatnonzero(self.slot_of >= 0)
 
     def is_resident(self, blocks) -> np.ndarray:
-        return np.asarray(self.slot_of)[np.asarray(blocks, int)] >= 0
+        return self.slot_of[np.asarray(blocks, int)] >= 0
 
     def check_invariants(self) -> None:
         """Raise if the block table is inconsistent (tests call this)."""
-        slot_of = np.asarray(self.slot_of)
-        block_at = np.asarray(self.block_at)
+        slot_of = self.slot_of
+        block_at = self.block_at
         res = np.flatnonzero(slot_of >= 0)
         slots = slot_of[res]
         if len(set(slots.tolist())) != len(slots):
@@ -134,10 +197,10 @@ class PagedKVPool:
         ``needed`` — logical block ids every request in the step reads or
         writes (deduplicated here). Plans all page-ins co-issued with the
         evictions they displace via ``DuplexOffloadEngine`` and executes
-        them with a single fused ``duplex_kv_stream`` call. Brand-new
-        blocks (no host copy yet — about to receive their first ``write``)
-        are installed into slots directly: they carry no link traffic and
-        are not billed as page-ins. Returns the step's paging counts.
+        them with a single kernel invocation. Brand-new blocks (no host
+        copy yet — about to receive their first ``write``) are installed
+        into slots directly: they carry no link traffic and are not billed
+        as page-ins. Returns the step's paging counts.
         """
         needed = np.unique(np.asarray(needed, np.int32))
         if needed.size > self.hbm_capacity:
@@ -145,13 +208,12 @@ class PagedKVPool:
                 f"step demands {needed.size} blocks but HBM holds "
                 f"{self.hbm_capacity}; cap the per-step working set")
         self.stats["steps"] += 1
-        slot_of = np.asarray(self.slot_of)
-        missing = needed[slot_of[needed] < 0]
+        missing = needed[self.slot_of[needed] < 0]
         report = {"page_ins": 0, "page_outs": 0}
         if missing.size:
             stale = missing[self._has_host[missing]]   # real page-ins
             fresh = missing[~self._has_host[missing]]  # first installs
-            free_slots = np.flatnonzero(np.asarray(self.block_at) < 0)
+            free_slots = np.flatnonzero(self.block_at < 0)
             n_evict = max(0, missing.size - free_slots.size)
             victims = self._pick_victims(n_evict, needed)
             report = self._execute(stale, fresh, victims,
@@ -163,15 +225,13 @@ class PagedKVPool:
         """k least-recently-used resident blocks outside ``keep``."""
         if k == 0:
             return np.zeros((0,), np.int32)
-        slot_of = np.asarray(self.slot_of)
-        last_use = np.asarray(self.last_use)
-        evictable = slot_of >= 0
+        evictable = self.slot_of >= 0
         evictable[keep] = False
         cand = np.flatnonzero(evictable)
         if cand.size < k:
             raise RuntimeError(
                 f"need {k} evictions but only {cand.size} evictable blocks")
-        order = cand[np.argsort(last_use[cand], kind="stable")]
+        order = cand[np.argsort(self.last_use[cand], kind="stable")]
         return order[:k].astype(np.int32)
 
     def _execute(self, stale: np.ndarray, fresh: np.ndarray,
@@ -180,16 +240,20 @@ class PagedKVPool:
 
         Only real data moves: ``stale`` blocks (host copies from earlier
         evictions) and *written* victims travel through the duplex plan +
-        fused kernel. ``fresh`` blocks are zero-installed, and victims
+        one kernel pass. ``fresh`` blocks are zero-installed, and victims
         that never received a ``write()`` just drop residency — neither
-        carries modelled or billed traffic.
+        carries modelled or billed traffic. When one direction is empty
+        the pass is the single-direction dequant-only / quant-only kernel
+        half — no zero blocks are streamed through the dead half of the
+        fused grid (billing is unchanged: the plan already carries only
+        the real transfers).
         """
-        victim_slots = np.asarray(self.slot_of)[victims]
+        victim_slots = self.slot_of[victims]
         outs = victims[self._dirty[victims]]       # real out traffic
-        out_slots = np.asarray(self.slot_of)[outs]
-        silent_slots = np.asarray(
-            self.slot_of)[victims[~self._dirty[victims]]]
+        out_slots = self.slot_of[outs]
+        silent_slots = self.slot_of[victims[~self._dirty[victims]]]
         block_bytes = float(np.prod(self.block_shape) * 2)  # bf16
+        in_deq = out_q = out_scale = None
         if stale.size or outs.size:
             plan = self.engine.plan_kv_paging(
                 needed_host_blocks=stale.tolist(),
@@ -208,81 +272,78 @@ class PagedKVPool:
             self.stats["page_outs"] += int(outs.size)
             self.stats["kernel_calls"] += 1
 
-            # ONE fused kernel pass over both streams, padded to a
-            # uniform grid.
-            m = max(stale.size, outs.size, 1)
-            T, D = self.block_shape
-
-            def pad(a, n):
-                if a.shape[0] == n:
-                    return a
-                fill = jnp.zeros((n - a.shape[0],) + a.shape[1:], a.dtype)
-                return jnp.concatenate([a, fill])
-
-            in_q = pad(self.host_q[jnp.asarray(stale)], m)
-            in_scale = pad(self.host_scale[jnp.asarray(stale)], m)
-            out_x = (pad(self.hbm[jnp.asarray(out_slots)], m)
-                     if outs.size
-                     else jnp.zeros((m, T, D), jnp.bfloat16))
-            in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
-                in_q, in_scale, out_x)
-
-            if outs.size:
-                o = jnp.asarray(outs)
-                self.host_q = self.host_q.at[o].set(out_q[:outs.size])
-                self.host_scale = self.host_scale.at[o].set(
-                    out_scale[:outs.size])
-                self._has_host[outs] = True
-                self._dirty[outs] = False   # host copy now matches
-        else:
-            in_deq = None
+            # ONE kernel pass over the step's real traffic.
+            if stale.size and outs.size:
+                # both directions busy: the fused duplex kernel, streams
+                # padded to a uniform grid.
+                in_q, in_scale, out_x = _gather_duplex(
+                    self.host_q, self.host_scale, self.hbm,
+                    jnp.asarray(stale), jnp.asarray(out_slots))
+                in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
+                    in_q, in_scale, out_x)
+            elif stale.size:
+                # page-ins only: dequant half, exactly stale.size blocks.
+                in_q, in_scale = _gather_in(self.host_q, self.host_scale,
+                                            jnp.asarray(stale))
+                in_deq = kernel_ops.dequant_kv_stream(in_q, in_scale)
+            else:
+                # page-outs only: quant half, exactly outs.size blocks.
+                out_q, out_scale = kernel_ops.quant_kv_stream(
+                    self.hbm[jnp.asarray(out_slots)])
 
         if victims.size:
-            self.block_at = self.block_at.at[
-                jnp.asarray(victim_slots)].set(-1)
-            self.slot_of = self.slot_of.at[jnp.asarray(victims)].set(-1)
+            self.block_at[victim_slots] = -1
+            self.slot_of[victims] = -1
 
         # stale blocks take the leading dst slots (they consume in_deq);
         # fresh blocks zero-fill the rest pending their first write.
         missing = np.concatenate([stale, fresh]).astype(np.int32)
         dst = np.concatenate([free_slots, victim_slots])[:missing.size]
-        dst_j, miss_j = jnp.asarray(dst), jnp.asarray(missing)
-        if stale.size:
-            self.hbm = self.hbm.at[dst_j[:stale.size]].set(
-                in_deq[:stale.size])
-        if fresh.size:
-            self.hbm = self.hbm.at[dst_j[stale.size:]].set(
-                jnp.zeros((), jnp.bfloat16))
-        self.slot_of = self.slot_of.at[miss_j].set(dst_j.astype(jnp.int32))
-        self.block_at = self.block_at.at[dst_j].set(miss_j.astype(jnp.int32))
+        dst = dst.astype(np.int32)
+        self.hbm, self.host_q, self.host_scale = _commit_paging(
+            self.hbm, self.host_q, self.host_scale, in_deq, out_q,
+            out_scale, jnp.asarray(outs), jnp.asarray(dst[:stale.size]),
+            jnp.asarray(dst[stale.size:]))
+        if outs.size:
+            self._has_host[outs] = True
+            self._dirty[outs] = False   # host copy now matches
+        self.slot_of[missing] = dst
+        self.block_at[dst] = missing
         return {"page_ins": int(stale.size), "page_outs": int(outs.size)}
 
     def _touch(self, blocks: np.ndarray) -> None:
         self._clock += 1
-        self.last_use = self.last_use.at[jnp.asarray(blocks)].set(
-            jnp.int32(self._clock))
+        self.last_use[blocks] = self._clock
 
     # -- batched data plane ------------------------------------------------
     def write(self, blocks, data: jnp.ndarray) -> None:
         """Write-through freshly produced blocks (must be resident).
 
         ``blocks``: (n,) logical ids; ``data``: (n, tokens, kv_dims).
+        Ids outside [0, n_blocks) are fixed-width padding sentinels: their
+        rows are dropped by the scatter, so callers can keep a static
+        update shape across steps (no retrace per block count).
         """
         blocks = np.asarray(blocks, np.int32)
         if blocks.size == 0:
             return
-        slots = np.asarray(self.slot_of)[blocks]
+        valid = (blocks >= 0) & (blocks < self.n_blocks)
+        real = blocks[valid]
+        if real.size == 0:
+            return
+        slots = self.slot_of[real]
         if (slots < 0).any():
             raise ValueError("write to non-resident block; call step() first")
-        self.hbm = self.hbm.at[jnp.asarray(slots)].set(
-            data.astype(jnp.bfloat16))
-        self._dirty[blocks] = True
-        self._touch(blocks)
+        dst = np.full(blocks.shape, self.hbm_capacity, np.int32)  # OOB pad
+        dst[valid] = slots
+        self.hbm = _write_blocks(self.hbm, jnp.asarray(dst), data)
+        self._dirty[real] = True
+        self._touch(real)
 
     def read(self, blocks) -> jnp.ndarray:
         """Gather resident blocks: (n, tokens, kv_dims) bf16."""
         blocks = np.asarray(blocks, np.int32)
-        slots = np.asarray(self.slot_of)[blocks]
+        slots = self.slot_of[blocks]
         if (slots < 0).any():
             raise ValueError("read of non-resident block; call step() first")
         self._touch(blocks)

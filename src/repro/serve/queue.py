@@ -16,6 +16,7 @@ across steps.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import itertools
 
 import jax
@@ -27,6 +28,12 @@ from repro.core import policies as policies_lib
 from repro.core.hints import HintTree, default_serving_hints
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+
+# Device-visible state codes: the engine's fused step loop keeps per-slot
+# request state in int32 device arrays and mirrors it back onto Request
+# objects once per engine step (``Request.sync_from_device``).
+S_EMPTY, S_PREFILL, S_DECODE, S_DONE = 0, 1, 2, 3
+STATE_OF_CODE = {S_PREFILL: PREFILL, S_DECODE: DECODE, S_DONE: DONE}
 
 _rid = itertools.count()
 
@@ -63,6 +70,49 @@ class Request:
     def finished(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
 
+    def sync_from_device(self, code: int, consumed: int, n_gen: int,
+                         newest_token: int) -> None:
+        """Refresh this host mirror from the engine's device-resident slot
+        state — the once-per-step completion readback. A slot emits at
+        most one token per engine step, so a grown ``n_gen`` means
+        ``newest_token`` is the one new sample to append."""
+        self.state = STATE_OF_CODE[int(code)]
+        self.consumed = int(consumed)
+        n_gen = int(n_gen)
+        if n_gen == len(self.generated) + 1:
+            self.generated.append(int(newest_token))
+        elif n_gen != len(self.generated):
+            raise RuntimeError(
+                f"rid {self.rid}: device reports {n_gen} generated tokens "
+                f"but the host mirror holds {len(self.generated)} — "
+                f"mirrors out of sync")
+
+
+@functools.lru_cache(maxsize=32)
+def _policy_programs(policy: policies_lib.Policy,
+                     params: policies_lib.PolicyParams, capacity: int):
+    """Jitted (schedule, update, slot-reset) programs for one
+    (Policy, PolicyParams, capacity) cell — policy functions are pure and
+    jit-compatible by contract, and eagerly dispatching their jnp math per
+    admission step dominated the queue's cost. Cached module-level so
+    every queue sharing the cell reuses the compiled programs."""
+    schedule = jax.jit(functools.partial(policy.schedule, params))
+    update = jax.jit(functools.partial(policy.update, params))
+
+    def reset(state, mask):
+        # reinitialize per-slot policy state for masked waiting slots
+        fresh = policy.init(params, capacity)
+
+        def sel(cur, f):
+            if getattr(cur, "ndim", 0) >= 1 and cur.shape[0] == capacity:
+                m = mask.reshape((-1,) + (1,) * (cur.ndim - 1))
+                return jnp.where(m, f, cur)
+            return cur
+
+        return jax.tree.map(sel, state, fresh)
+
+    return schedule, update, jax.jit(reset)
+
 
 class RequestQueue:
     """Bounded waiting room with policy-driven admission."""
@@ -81,6 +131,8 @@ class RequestQueue:
         self.kv_bytes = float(kv_bytes_per_token)
         self._slots: list[Request | None] = [None] * capacity
         self._state = self.policy.init(self.params, capacity)
+        self._schedule_fn, self._update_fn, self._reset_fn = \
+            _policy_programs(self.policy, self.params, capacity)
         opt = channel_lib.duplex_benefit(link)
         self._opt_r = jnp.float32(opt["peak_read_fraction"])
         self._duplex = jnp.asarray(link.duplex)
@@ -150,7 +202,7 @@ class RequestQueue:
         if n_free <= 0 or not self.waiting(now):
             return []
         obs, arrived = self._observe(now)
-        self._state, w = self.policy.schedule(self.params, self._state, obs)
+        self._state, w = self._schedule_fn(self._state, obs)
         w = np.asarray(w, np.float32)
         # policy weight first, FIFO (arrival, submit order) as tie-break;
         # rid is monotonic in submit order, unlike the waiting-room slot
@@ -174,23 +226,17 @@ class RequestQueue:
             moved_read=jnp.asarray(moved_r),
             moved_write=jnp.asarray(moved_w),
             utilization=jnp.float32(min(1.0, len(take) / max(n_free, 1))))
-        self._state = self.policy.update(self.params, self._state, fb)
+        self._state = self._update_fn(self._state, fb)
         self._reset_slot_state(take)
         return admitted
 
     def _reset_slot_state(self, idx: list[int]) -> None:
         """Reinitialize per-slot policy state for vacated waiting slots —
         a later request recycling the slot must not inherit the previous
-        occupant's vruntime/history."""
+        occupant's vruntime/history. One fused program over a fixed-width
+        slot mask (no per-leaf dispatch, no retrace on count)."""
         if not idx:
             return
-        fresh = self.policy.init(self.params, self.capacity)
-        sel = jnp.asarray(np.asarray(idx, np.int32))
-
-        def reset(cur, f):
-            if (hasattr(cur, "ndim") and cur.ndim >= 1
-                    and cur.shape[0] == self.capacity):
-                return cur.at[sel].set(f[sel])
-            return cur
-
-        self._state = jax.tree.map(reset, self._state, fresh)
+        mask = np.zeros((self.capacity,), bool)
+        mask[idx] = True
+        self._state = self._reset_fn(self._state, jnp.asarray(mask))

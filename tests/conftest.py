@@ -14,5 +14,25 @@ def rng():
     return np.random.default_rng(0)
 
 
+@pytest.fixture
+def kernel_call_counter(monkeypatch):
+    """Patch every serve stream-kernel entry point (fused duplex + the
+    two single-direction halves) with call counters. Yields a list of
+    (entry_point_name, n_blocks) tuples, one per invocation."""
+    from repro.serve import kv_pool as kv_pool_mod
+
+    calls: list[tuple[str, int]] = []
+    for name in ("duplex_kv_stream", "dequant_kv_stream",
+                 "quant_kv_stream"):
+        real = getattr(kv_pool_mod.kernel_ops, name)
+
+        def counting(*a, _real=real, _name=name, **kw):
+            calls.append((_name, a[0].shape[0]))
+            return _real(*a, **kw)
+
+        monkeypatch.setattr(kv_pool_mod.kernel_ops, name, counting)
+    return calls
+
+
 def to_f32(x):
     return np.asarray(x, np.float32)

@@ -1,5 +1,5 @@
 """PagedKVPool: residency invariants, vectorized LRU, int8 round-trip,
-batched duplex paging."""
+batched duplex paging, single-direction kernel halves."""
 
 import jax
 import jax.numpy as jnp
@@ -191,3 +191,49 @@ class TestBatchedPaging:
         assert pool.stats["page_ins"] == 8
         assert pool.stats["page_outs"] == 0
         assert pool.duplex_speedup() >= 1.0
+
+
+class TestSingleDirectionPaths:
+    """When one stream is empty the pool calls the dequant-only /
+    quant-only kernel half — no zero blocks padded through the dead half
+    of the fused grid — with billing identical to before. The
+    ``kernel_call_counter`` fixture (conftest) records every stream-kernel
+    entry point as (name, n_blocks)."""
+
+    def test_pure_page_in_uses_dequant_half(self, kernel_call_counter):
+        pool = _pool(n=16, hbm=4)
+        _fill(pool, range(4))
+        pool.step(range(4, 8))               # spill 0..3 to host
+        pool.free(list(range(4, 8)))         # all slots free again
+        pool.reset_stats()
+        del kernel_call_counter[:]
+        pool.step([0, 1, 2])                 # page-in only
+        assert kernel_call_counter == [("dequant_kv_stream", 3)]
+        assert pool.stats["page_ins"] == 3
+        assert pool.stats["page_outs"] == 0
+        assert pool.stats["kernel_calls"] == 1
+        # the data really arrived
+        x = np.asarray(pool.read([0]), np.float32)
+        ref = np.asarray(_rand(0), np.float32)
+        assert np.abs(x[0] - ref).max() <= np.abs(ref).max() / 127.0 + 0.02
+
+    def test_pure_page_out_uses_quant_half(self, kernel_call_counter):
+        pool = _pool(n=16, hbm=4)
+        _fill(pool, range(4))                # dirty residents, empty host
+        del kernel_call_counter[:]
+        pool.step([4, 5])                    # evicts 2 dirty: page-out only
+        assert kernel_call_counter == [("quant_kv_stream", 2)]
+        assert pool.stats["page_outs"] == 2
+        assert pool.stats["page_ins"] == 0
+        assert pool.stats["kernel_calls"] == 1
+        assert pool.stats["duplex_us"] > 0   # billing unchanged
+
+    def test_mixed_traffic_still_fused(self, kernel_call_counter):
+        pool = _pool(n=16, hbm=4)
+        _fill(pool, range(4))
+        pool.step(range(4, 8))               # spill 0..3
+        _fill(pool, range(4, 8))             # dirty residents again
+        del kernel_call_counter[:]
+        pool.step([0, 1])                    # ins co-issued with outs
+        assert [name for name, _ in kernel_call_counter] == \
+            ["duplex_kv_stream"]
