@@ -4,32 +4,43 @@ from __future__ import annotations
 
 import csv
 import io
+import json
 import os
 import time
+
+#: Row provenance labels: ``engine`` rows were measured on the real
+#: ServeEngine / kernels (functional execution real, link timing
+#: modelled); ``sim`` rows come from the analytical stream simulator
+#: (``core.scheduler``). run.py's CSV carries the label per row so the
+#: two are never conflated.
+ENGINE, SIM = "engine", "sim"
 
 
 class Bench:
     """Collects rows and renders the run.py CSV contract:
-    ``name,us_per_call,derived``."""
+    ``name,provenance,us_per_call,derived``."""
 
-    def __init__(self, name: str):
+    def __init__(self, name: str, provenance: str = SIM):
         self.name = name
-        self.rows: list[tuple[str, float, str]] = []
+        self.provenance = provenance
+        self.rows: list[tuple[str, str, float, str]] = []
         self._t0 = time.monotonic()
 
-    def row(self, sub: str, us: float, derived: str):
-        self.rows.append((f"{self.name}/{sub}", us, derived))
+    def row(self, sub: str, us: float, derived: str,
+            provenance: str | None = None):
+        self.rows.append((f"{self.name}/{sub}",
+                          provenance or self.provenance, us, derived))
 
     def done(self, derived: str = ""):
         total_us = (time.monotonic() - self._t0) * 1e6
-        self.rows.append((self.name, total_us, derived))
+        self.rows.append((self.name, self.provenance, total_us, derived))
         return self
 
     def render(self) -> str:
         buf = io.StringIO()
         w = csv.writer(buf)
-        for name, us, derived in self.rows:
-            w.writerow([name, f"{us:.1f}", derived])
+        for name, provenance, us, derived in self.rows:
+            w.writerow([name, provenance, f"{us:.1f}", derived])
         return buf.getvalue()
 
 
@@ -47,3 +58,48 @@ def write_csv(fname: str, header: list[str], rows: list[list]):
         w.writerow(header)
         w.writerows(rows)
     return path
+
+
+def aggregate_link_stats(stats: dict, prefix: str) -> dict:
+    """Sum a tenant's hint scopes out of ``paging_stats()["by_path"]``."""
+    agg = {"duplex_us": 0.0, "serial_us": 0.0, "page_ins": 0,
+           "page_outs": 0, "fused_calls": 0}
+    for path, st in stats["by_path"].items():
+        if path.startswith(prefix):
+            for k in agg:
+                agg[k] += st[k]
+    return agg
+
+
+def bench_json_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        "BENCH_serve.json")
+
+
+def update_bench_json(section: str, payload: dict) -> dict:
+    """Read-modify-write one workload's section of ``BENCH_serve.json``.
+
+    The file is the repo-root serving perf trajectory marker, one section
+    per workload: ``{"llm": {...}, "redis": {...}, "vectordb": {...}}``.
+    Each benchmark module owns its section; CI diffs per workload against
+    the previous CI run. A legacy flat file (pre-multi-tenant: top-level
+    ``tokens_per_s``) is migrated into the ``llm`` section on first
+    touch.
+    """
+    path = bench_json_path()
+    doc: dict = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            doc = {}
+        if "tokens_per_s" in doc:                 # legacy flat schema
+            doc = {"llm": {k: doc[k] for k in
+                           ("tokens_per_s", "steps", "duplex_speedup")
+                           if k in doc}}
+    doc[section] = payload
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return doc

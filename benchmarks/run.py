@@ -1,14 +1,20 @@
 """Benchmark driver — one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV rows (run.py contract) and writes
-per-figure CSVs under experiments/bench/.
+Prints ``name,provenance,us_per_call,derived`` CSV rows (run.py contract)
+and writes per-figure CSVs under experiments/bench/. The ``provenance``
+column separates real-engine measurements (``engine``: ServeEngine /
+Pallas kernels; functional execution real, link timing modelled) from
+analytical stream-simulator numbers (``sim``: ``core.scheduler``) — the
+redis/vectordb figures are engine rows since the multi-tenant rewrite.
 
   PYTHONPATH=src python -m benchmarks.run [--only characterization,...]
+                                          [--smoke]
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -22,6 +28,9 @@ def main() -> int:
     p = argparse.ArgumentParser()
     p.add_argument("--only", default=None,
                    help="comma-separated subset of: " + ",".join(MODULES))
+    p.add_argument("--smoke", action="store_true",
+                   help="tiny step counts (CI smoke mode) for modules "
+                        "that support it")
     args = p.parse_args()
     todo = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in todo if n not in MODULES]
@@ -34,16 +43,20 @@ def main() -> int:
     out_dir()
 
     failed: list[str] = []
-    print("name,us_per_call,derived")
+    print("name,provenance,us_per_call,derived")
     for name in todo:
         try:
             mod = __import__(f"benchmarks.{name}", fromlist=["run"])
-            bench = mod.run()
+            kwargs = {}
+            if args.smoke and \
+                    "smoke" in inspect.signature(mod.run).parameters:
+                kwargs["smoke"] = True
+            bench = mod.run(**kwargs)
             sys.stdout.write(bench.render())
             sys.stdout.flush()
         except Exception:                      # noqa: BLE001
             failed.append(name)
-            print(f"{name},0,ERROR")
+            print(f"{name},error,0,ERROR")
             traceback.print_exc()
     if failed:
         print(f"benchmark modules failed: {','.join(failed)}",

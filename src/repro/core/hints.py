@@ -147,7 +147,17 @@ def default_training_hints() -> HintTree:
 
 
 def default_serving_hints() -> HintTree:
-    """Serving job defaults, per the paper's §6.4 layer analysis."""
+    """Serving job defaults, per the paper's §6.4 layer analysis.
+
+    Scopes now span the engine's three tenant families (§6.3-6.5): LLM
+    decode (``/serve/llm``), the Redis-style KV store (``/serve/redis``
+    with one child per Fig. 5 access pattern), and the vector-search
+    tenant (``/serve/vectordb``). ``ServeEngine.submit`` and each
+    ``WorkloadAPI`` tag their requests with these paths; the queue's
+    admission policy reads the resolved read fractions / priorities and
+    the ``PagedKVPool`` gates duplex intervention per scope
+    (``duplex_opt_in=False`` == the paper's withdrawal mechanism).
+    """
     t = HintTree()
     t.set("/serve", MemoryHint(priority=1.0))
     t.set("/serve/attention",
@@ -160,4 +170,41 @@ def default_serving_hints() -> HintTree:
     # read-heavy prompt processing opts out (paper: intervention withdrawn).
     t.set("/serve/prefill", MemoryHint(read_fraction=0.95,
                                        duplex_opt_in=False))
+
+    # -- LLM tenant: prompt processing opts out, decode is the §6.4 mix.
+    t.set("/serve/llm", MemoryHint(priority=1.0))
+    t.set("/serve/llm/prefill", MemoryHint(read_fraction=0.95,
+                                           duplex_opt_in=False))
+    t.set("/serve/llm/decode",
+          MemoryHint(read_fraction=0.85, phase_period_us=64.0))
+
+    # -- Redis-style KV-store tenant: one scope per Fig. 5 pattern. The
+    # unidirectional patterns withdraw (paper: -22% read-heavy / -16%
+    # write-heavy without withdrawal); the mixed-direction patterns stay
+    # opted in and declare their phase structure.
+    t.set("/serve/redis", MemoryHint(priority=1.0))
+    t.set("/serve/redis/read_heavy",
+          MemoryHint(read_fraction=10.0 / 11.0, duplex_opt_in=False))
+    t.set("/serve/redis/write_heavy",
+          MemoryHint(read_fraction=1.0 / 11.0, duplex_opt_in=False))
+    t.set("/serve/redis/pipelined",
+          MemoryHint(read_fraction=0.5, phase_period_us=8.0))
+    t.set("/serve/redis/gaussian", MemoryHint(read_fraction=0.5))
+    t.set("/serve/redis/seq",
+          MemoryHint(read_fraction=0.5, sequential=True,
+                     phase_period_us=64.0))
+    # phase-offset sub-streams of the sequential sweep: declared leaning
+    # lets the duplex-aware policy co-schedule opposite phases (+150%).
+    t.set("/serve/redis/seq/read",
+          MemoryHint(read_fraction=0.95, sequential=True))
+    t.set("/serve/redis/seq/write",
+          MemoryHint(read_fraction=0.05, sequential=True))
+
+    # -- vector-search tenant: read-dominated HNSW walk with write bursts
+    # for distance caching / result aggregation (§6.5).
+    t.set("/serve/vectordb",
+          MemoryHint(read_fraction=0.85, phase_period_us=32.0))
+    t.set("/serve/vectordb/build",
+          MemoryHint(read_fraction=0.05, sequential=True))
+    t.set("/serve/vectordb/results", MemoryHint(read_fraction=0.1))
     return t

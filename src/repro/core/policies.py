@@ -475,6 +475,22 @@ def get_policy(name: str) -> Policy:
         ) from None
 
 
+def seed_read_fraction(state: Any, slot: int, read_fraction: float) -> Any:
+    """Seed one slot's declared read fraction into a policy's trend state.
+
+    The cgroup-hint bootstrap of §4.5: when a request (stream) enters a
+    scheduling slot, its *declared* read fraction replaces the cold-start
+    EWMA estimate so the forecast is precise from step 0 instead of
+    converging over a window. No-op for stateless policies (cfs,
+    threshold, ...) — only ``TimeSeriesState``-shaped states carry a
+    per-slot ``ewma_rf`` forecast.
+    """
+    if isinstance(state, TimeSeriesState):
+        return state._replace(
+            ewma_rf=state.ewma_rf.at[slot].set(jnp.float32(read_fraction)))
+    return state
+
+
 def migration_volume(prev_w: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """L1 weight reallocation per step — the migration overhead proxy that
     the simulator charges against channel capacity (cache disruption)."""

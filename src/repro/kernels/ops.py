@@ -12,6 +12,7 @@ import jax
 from repro.kernels import duplex_stream as _ds
 from repro.kernels import flash_attention as _fa
 from repro.kernels import rwkv6_scan as _rs
+from repro.kernels import vector_distance as _vd
 
 
 def _default_interpret() -> bool:
@@ -46,6 +47,13 @@ def quant_kv_stream(out_x, *, interpret=None):
     if interpret is None:
         interpret = _default_interpret()
     return _ds.quant_stream(out_x, interpret=interpret)
+
+
+def l2_distance(queries, blocks, *, interpret=None):
+    """Batched query-to-block L2 distances (vector-search tenant)."""
+    if interpret is None:
+        interpret = _default_interpret()
+    return _vd.l2_distance(queries, blocks, interpret=interpret)
 
 
 def wkv6(r, k, v, w, u, *, chunk=128, interpret=None):

@@ -46,3 +46,15 @@ def duplex_kv_stream(in_q, in_scale, out_x):
     in_deq = dequantize_int8(in_q, in_scale)
     out_q, out_scale = quantize_int8(out_x)
     return in_deq, out_q, out_scale
+
+
+def l2_distance(queries, blocks):
+    """Oracle for the batched gather + L2 distance kernel.
+
+    queries: (Q, D); blocks: (N, T, D). Returns (N, Q, T) f32 squared
+    distances.
+    """
+    q = queries.astype(jnp.float32)
+    b = blocks.astype(jnp.float32)
+    diff = q[None, :, None, :] - b[:, None, :, :]
+    return jnp.sum(diff * diff, axis=-1)

@@ -1,14 +1,17 @@
-"""Serving driver: continuous-batching decode with duplex-paged KV.
+"""Serving driver: multi-tenant continuous batching with duplex-paged KV.
 
 Requests arrive staggered into the ``ServeEngine`` step loop; the
-admission policy (``core.policies``) picks which waiting prefills join
-the running batch, and every step's KV block traffic pages through the
-``DuplexOffloadEngine`` in one fused kernel pass. The run report (JSON,
-last line) carries throughput plus the paging stats and modelled
+admission policy (``core.policies``) picks which waiting work joins the
+running set — LLM prefills into decode slots, and (with ``--tenants``)
+KV-store op streams and vector-search query walks into tenant slots —
+and every step's block traffic pages through the ``DuplexOffloadEngine``
+in one grouped transaction. The run report (JSON, last line) carries
+throughput plus the paging stats, per-hint-scope billing, and modelled
 duplex-vs-serial speedup.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m \
-      --batch 4 --requests 8 --prompt-len 8 --gen 16 --arrival-every 2
+      --batch 4 --requests 8 --prompt-len 8 --gen 16 --arrival-every 2 \
+      --tenants redis,vectordb
 """
 
 from __future__ import annotations
@@ -23,7 +26,8 @@ import numpy as np
 
 from repro import configs as configs_lib
 from repro.models import registry as R
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import (EngineConfig, KVStoreTenant, ServeEngine,
+                         VectorSearchTenant)
 
 
 def main() -> int:
@@ -45,6 +49,12 @@ def main() -> int:
     p.add_argument("--prefill-chunk", type=int, default=4)
     p.add_argument("--policy", default="hinted",
                    help="admission policy (core.policies registry)")
+    p.add_argument("--tenants", default="",
+                   help="comma-separated non-LLM tenants to co-serve: "
+                        "redis,vectordb (each adds hint-scoped op "
+                        "streams through the shared pool)")
+    p.add_argument("--tenant-steps", type=int, default=32,
+                   help="op-stream length for each tenant request")
     p.add_argument("--arrival-every", type=int, default=2,
                    help="steps between request arrivals (0 = all at once)")
     p.add_argument("--no-paging", action="store_true",
@@ -58,14 +68,37 @@ def main() -> int:
 
     api = R.build(args.arch, smoke=not args.full)
     params = api.init(jax.random.PRNGKey(0))
+    # tenants reserve per-step HBM headroom; grow the pool's working set
+    # so LLM decode keeps its share (redis: 2 blocks/step, vectordb: 4).
+    reserve = {"redis": 2, "vectordb": 4}
+    tenant_reserve = sum(reserve.get(t, 0)
+                         for t in args.tenants.split(",") if t)
     cfg = EngineConfig(
         max_batch=args.batch, cache_len=args.cache_len,
-        block_tokens=args.block_tokens, hbm_blocks=args.hbm_blocks,
+        block_tokens=args.block_tokens,
+        hbm_blocks=max(args.hbm_blocks, tenant_reserve + 4),
         pool_blocks=args.pool_blocks, prefill_chunk=args.prefill_chunk,
-        max_queue=max(args.requests, args.batch), policy=args.policy,
+        max_queue=max(args.requests, args.batch) + 8, policy=args.policy,
         paging=not args.no_paging)
+    tenant_names = [t for t in args.tenants.split(",") if t]
+    unknown = [t for t in tenant_names if t not in ("redis", "vectordb")]
+    if unknown:
+        p.error(f"unknown tenants {unknown}; choose from redis,vectordb")
+    if tenant_names and args.no_paging:
+        p.error("tenants serve from the paged pool; drop --no-paging")
+
     def build_and_submit():
         engine = ServeEngine(api, params, cfg)
+        if "redis" in tenant_names:
+            kv = engine.add_tenant(KVStoreTenant(
+                n_slots=2, ops_per_step=1, store_blocks=16))
+            kv.preload(16)
+            kv.submit("sequential", n_steps=args.tenant_steps)
+            kv.submit("sequential", n_steps=args.tenant_steps)
+        if "vectordb" in tenant_names:
+            vec = engine.add_tenant(VectorSearchTenant(
+                n_slots=1, visits_per_step=2, data_blocks=12))
+            vec.submit(n_steps=args.tenant_steps)
         key = jax.random.PRNGKey(1)
         rids = []
         for i in range(args.requests):
@@ -99,17 +132,24 @@ def main() -> int:
     print(f"first request: admitted step {first.admitted_step}, done step "
           f"{first.done_step}, tokens {outs[rids[0]][:8].tolist()}...")
 
+    def _round(v):
+        if isinstance(v, float):
+            return round(v, 3)
+        if isinstance(v, dict):
+            return {k: _round(x) for k, x in v.items()}
+        return v
+
     report = {
         "arch": args.arch,
         "policy": args.policy,
         "requests": args.requests,
+        "tenants": tenant_names,
         "slots": args.batch,
         "generated_tokens": int(total_tokens),
         "steps": int(engine.step_count),
         "wall_s": round(dt, 3),
         "tok_s": round(total_tokens / dt, 2),
-        "paging": {k: (round(v, 3) if isinstance(v, float) else v)
-                   for k, v in engine.paging_stats().items()},
+        "paging": _round(engine.paging_stats()),
     }
     print(json.dumps(report))
 

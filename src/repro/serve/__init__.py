@@ -1,29 +1,43 @@
-"""Continuous-batching serving engine over the duplex-paged KV pool.
+"""Multi-tenant continuous-batching serving over the duplex-paged KV pool.
 
 The serving stack, layered (see README.md):
 
   RequestQueue  — admission via the same ``core.policies`` Policy protocol
-                  the simulator uses (waiting prefills are streams);
-  PagedKVPool   — vectorized block-table KV pool (jnp residency/slot-map/
-                  LRU-clock arrays); page-in/page-out sets planned batched
-                  across all requests per step by ``DuplexOffloadEngine``;
-  ServeEngine   — the step loop: per-request arrival/completion, chunked
-                  prefill, block write-through, one stream-kernel
-                  invocation per step for the whole batch's traffic. The
-                  token loop itself is ONE jitted, buffer-donated XLA
-                  program per step (device-resident slot state, on-device
-                  argmax feedback, a single packed completion readback).
+                  the simulator uses; every tenant's requests (LLM
+                  prefills, KV-store op streams, vector-query walks) wait
+                  here as hint-scoped streams;
+  PagedKVPool   — vectorized block-table KV pool (host-numpy residency/
+                  slot-map/LRU-clock metadata); each step's page-in/
+                  page-out sets planned per hint scope by
+                  ``DuplexOffloadEngine`` in one ``step_multi``
+                  transaction — withdrawn scopes (duplex_opt_in=False)
+                  execute through the single-direction kernel halves;
+  WorkloadAPI   — the non-LLM tenant contract (sibling of ModelAPI):
+                  KVStoreTenant (GET/SET/SCAN over pool-resident values)
+                  and VectorSearchTenant (batched gather + L2 distance
+                  walk with result write-back);
+  ServeEngine   — the step loop: policy admission across tenants, the
+                  fused jitted LLM token program (device-resident slot
+                  state, on-device argmax feedback, a single packed
+                  completion readback — the step's only host sync), one
+                  merged paging transaction, tenant device compute.
 """
 
 from repro.serve.engine import EngineConfig, ServeEngine, reference_decode
 from repro.serve.kv_pool import PagedKVPool
-from repro.serve.queue import Request, RequestQueue
+from repro.serve.queue import Request, RequestQueue, TrafficProfile
+from repro.serve.workloads import (KVStoreTenant, VectorSearchTenant,
+                                   WorkloadAPI)
 
 __all__ = [
     "EngineConfig",
+    "KVStoreTenant",
     "PagedKVPool",
     "Request",
     "RequestQueue",
     "ServeEngine",
+    "TrafficProfile",
+    "VectorSearchTenant",
+    "WorkloadAPI",
     "reference_decode",
 ]

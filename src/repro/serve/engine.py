@@ -329,10 +329,41 @@ class ServeEngine:
         self.step_count = 0
         self.completed: dict[int, Request] = {}
         self._scan_cursor: dict[int, int] = {}   # rid -> cold-block cursor
+        # non-LLM tenants (WorkloadAPI) sharing the pool, the paging
+        # transaction, and the admission queue with LLM decode.
+        self.tenants: dict[str, "object"] = {}
+        self._reserved_blocks = 0   # HBM headroom promised to tenants
+
+    # -- tenants -----------------------------------------------------------
+    def add_tenant(self, workload):
+        """Attach a ``WorkloadAPI`` tenant (KV store, vector search, ...).
+
+        The tenant's requests go through the shared ``RequestQueue`` (one
+        admission policy across every workload, per-request hint scopes)
+        and its per-step block demand joins LLM KV paging in the same
+        ``PagedKVPool.step_multi`` transaction. ``blocks_per_step`` HBM
+        blocks are reserved so joint demand can never overflow the pool.
+        """
+        if not self.paged:
+            raise ValueError(
+                "tenants serve from the paged KV pool; this engine has "
+                "paging disabled (or a non-pageable cache family)")
+        if workload.name in self.tenants or workload.name == "llm":
+            raise ValueError(f"tenant name {workload.name!r} already taken")
+        reserved = self._reserved_blocks + workload.blocks_per_step
+        if reserved >= self.pool.hbm_capacity:
+            raise ValueError(
+                f"tenants would reserve {reserved} of "
+                f"{self.pool.hbm_capacity} HBM blocks; grow hbm_blocks or "
+                f"shrink the tenant's per-step footprint")
+        workload.bind(self)
+        self.tenants[workload.name] = workload
+        self._reserved_blocks = reserved
+        return workload
 
     # -- intake ------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, arrival_step: int = 0,
-               hint_path: str = "/serve/prefill") -> Request:
+               hint_path: str = "/serve/llm/prefill") -> Request:
         req = Request(prompt=np.asarray(prompt, np.int32),
                       max_new_tokens=max_new_tokens,
                       arrival_step=arrival_step, hint_path=hint_path)
@@ -366,15 +397,16 @@ class ServeEngine:
         return [r for r in self.slots if r is not None]
 
     def pending(self) -> int:
-        return len(self.queue) + len(self.active())
+        return (len(self.queue) + len(self.active())
+                + sum(t.pending() for t in self.tenants.values()))
 
     # -- the step loop -----------------------------------------------------
     def step(self) -> dict:
         now = self.step_count
         admitted = self._admit(now)
         advanced = self._advance_tokens()
-        paged = self._page_kv() if self.paged else {"page_ins": 0,
-                                                    "page_outs": 0}
+        paged = self._page_kv(now) if self.paged else {"page_ins": 0,
+                                                       "page_outs": 0}
         completed = self._retire(now)
         self.step_count += 1
         return {"step": now, "admitted": admitted, "advanced": advanced,
@@ -388,8 +420,11 @@ class ServeEngine:
                 break
             self.step()
         if self.pending():
-            stuck = sorted([r.rid for r in self.queue.waiting()]
-                           + [r.rid for r in self.active()])
+            stuck = sorted(
+                [r.rid for r in self.queue.waiting()]
+                + [r.rid for r in self.active()]
+                + [r.rid for t in self.tenants.values()
+                   for r in t.running()])
             raise RuntimeError(
                 f"requests still pending after {limit} steps: "
                 f"rids {stuck}")
@@ -412,18 +447,21 @@ class ServeEngine:
 
     def _admission_budget(self, now: int, n_free: int) -> int:
         """Cap admissions on write-through headroom: the whole batch's
-        worst-case newly filled blocks per step must fit the pool's HBM,
-        so the mid-step overflow is unreachable — joint prefill demand
-        throttles at admission instead of raising in ``_page_kv``.
-        Requests left waiting are retried as running rows retire."""
+        worst-case newly filled blocks per step — plus the HBM blocks
+        reserved for attached tenants — must fit the pool's HBM, so the
+        mid-step overflow is unreachable; joint prefill demand throttles
+        at admission instead of raising in ``_page_kv``. Requests left
+        waiting are retried as running rows retire."""
         if not self.paged:
             return n_free
         running = sum(
             self._worst_step_blocks(r.prompt_len, r.max_new_tokens,
                                     r.state == PREFILL)
             for r in self.active())
-        headroom = self.pool.hbm_capacity - running
-        arrived = self.queue.waiting(now)
+        headroom = (self.pool.hbm_capacity - self._reserved_blocks
+                    - running)
+        arrived = [r for r in self.queue.waiting(now)
+                   if r.tenant == "llm"]
         if not arrived or headroom < 1:
             return 0 if arrived else n_free
         # conservative per-admission cost: the largest worst-case among
@@ -436,21 +474,30 @@ class ServeEngine:
 
     def _admit(self, now: int) -> int:
         free = [i for i, r in enumerate(self.slots) if r is None]
-        if not free:
-            return 0
-        budget = self._admission_budget(now, len(free))
-        if budget <= 0:
+        budget: int | dict[str, int] = self._admission_budget(
+            now, len(free)) if free else 0
+        if self.tenants:
+            budget = {"llm": max(0, budget)}
+            for t in self.tenants.values():
+                budget[t.name] = t.free_slots()
+        elif budget <= 0:
             return 0
         admitted = self.queue.dispatch(now, budget)
         if not admitted:
             return 0
+        llm = [r for r in admitted if r.tenant == "llm"]
+        for req in admitted:
+            if req.tenant != "llm":
+                self.tenants[req.tenant].start(req, now)
+        if not llm:
+            return len(admitted)
         B = self.cfg.max_batch
         P = self.cfg.cache_len
         mask = np.zeros((B,), bool)
         prompts = np.zeros((B, P), np.int32)
         plen = np.zeros((B,), np.int32)
         mnew = np.zeros((B,), np.int32)
-        for req in admitted:
+        for req in llm:
             slot = free.pop(0)
             req.slot = slot
             self.slots[slot] = req
@@ -503,8 +550,12 @@ class ServeEngine:
                 advanced -= 1
         return advanced
 
-    # -- phase 3: batched KV paging -----------------------------------------
-    def _page_kv(self) -> dict:
+    # -- phase 3: batched KV paging (all tenants, one transaction) ----------
+    def _page_kv(self, now: int = 0) -> dict:
+        """One paging transaction for the whole step: LLM KV traffic plus
+        every tenant's block demand, grouped by hint scope, through a
+        single ``PagedKVPool.step_multi`` call; then the LLM write-through
+        and each tenant's device compute against the resident blocks."""
         bt = self.cfg.block_tokens
         live = [r for r in self.active() if r.state != DONE]
         new_pairs: list[tuple[Request, int]] = []   # (req, block_index)
@@ -515,21 +566,36 @@ class ServeEngine:
                 r.blocks.extend(self.pool.alloc(1))
                 new_pairs.append((r, bi))
 
+        # tenant demand first: it is bounded by the per-tenant
+        # reservations, and the LLM cold-scan budget shrinks to whatever
+        # the tenants actually left unclaimed this step.
+        tenant_groups: list[tuple[str, list[int]]] = []
+        tenant_blocks = 0
+        for t in self.tenants.values():
+            for path, ids in t.block_demand(now):
+                if ids:
+                    tenant_groups.append((path, ids))
+                    tenant_blocks += len(set(ids))
+
         new_ids = [r.blocks[bi] for r, bi in new_pairs]
-        if len(new_ids) > self.pool.hbm_capacity:
+        budget = self.pool.hbm_capacity - tenant_blocks
+        if len(new_ids) > budget:
             raise RuntimeError(
                 f"{len(new_ids)} blocks filled in one step but pool HBM "
-                f"holds {self.pool.hbm_capacity}; shrink prefill_chunk or "
-                f"grow hbm_blocks")
+                f"holds {self.pool.hbm_capacity} ({tenant_blocks} claimed "
+                f"by tenants); shrink prefill_chunk or grow hbm_blocks")
         # new blocks first — they must be resident for the write-through;
         # demand beyond capacity is advisory and may be trimmed.
         demand = self._block_demand(live)
         needed = list(dict.fromkeys(new_ids + [b for _, b, _ in demand]))
-        needed = needed[:self.pool.hbm_capacity]
+        needed = needed[:budget]
         self._advance_cursors(demand, set(needed))
-        if not needed:
+        groups = ([("/serve/kv_cache", needed)] if needed else []) \
+            + tenant_groups
+        if not groups and not self.tenants:
             return {"page_ins": 0, "page_outs": 0}
-        report = self.pool.step(needed)
+        report = (self.pool.step_multi(groups) if groups
+                  else {"page_ins": 0, "page_outs": 0})
 
         if new_pairs:
             # fixed-width (hbm_capacity) extraction + write: padding rows
@@ -547,6 +613,8 @@ class ServeEngine:
                 self.cache["k"], self.cache["v"], jnp.asarray(slot_idx),
                 jnp.asarray(t0), block_tokens=bt)
             self.pool.write(ids, data)
+        for t in self.tenants.values():
+            t.compute(self.pool, now)
         return report
 
     def _block_demand(self, live: list[Request]
@@ -600,14 +668,25 @@ class ServeEngine:
                 self.slots[i] = None
                 self.completed[r.rid] = r
                 n += 1
+        for t in self.tenants.values():
+            for r in t.retire(now):
+                self.completed[r.rid] = r
+                n += 1
         return n
 
     # -- reporting -----------------------------------------------------------
     def paging_stats(self) -> dict:
         if not self.paged:
             return {"paged": False}
-        return {"paged": True, **self.pool.stats,
-                "duplex_speedup": self.pool.duplex_speedup()}
+        stats = {"paged": True, **self.pool.stats,
+                 "duplex_speedup": self.pool.duplex_speedup()}
+        stats["by_path"] = {
+            path: {**st, "duplex_speedup": self.pool.duplex_speedup(path)}
+            for path, st in self.pool.stats["by_path"].items()}
+        if self.tenants:
+            stats["tenants"] = {t.name: t.stats()
+                                for t in self.tenants.values()}
+        return stats
 
 
 def reference_decode(api: ModelAPI, params, prompts: jnp.ndarray,

@@ -43,7 +43,13 @@ from repro.kernels import ops as kernel_ops
 
 def _fresh_stats() -> dict:
     return {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
-            "serial_us": 0.0, "kernel_calls": 0, "steps": 0}
+            "serial_us": 0.0, "kernel_calls": 0, "steps": 0,
+            "by_path": {}}
+
+
+def _fresh_path_stats() -> dict:
+    return {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
+            "serial_us": 0.0, "fused_calls": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +169,19 @@ class PagedKVPool:
         # a reused id must not inherit the old request's recency clock
         self.last_use[blocks] = 0
 
+    def invalidate(self, blocks) -> None:
+        """Declare full-block overwrites: the caller rewrites these blocks
+        entirely this step (a batched whole-value SET), so a non-resident
+        block's host copy is dead data — it installs fresh instead of
+        paging in. There is no read-modify-write to preserve; resident
+        blocks are untouched (their overwrite is a plain ``write``)."""
+        blocks = np.asarray(blocks, np.int32).reshape(-1)
+        if blocks.size == 0:
+            return
+        nonres = blocks[self.slot_of[blocks] < 0]
+        self._has_host[nonres] = False
+        self._dirty[nonres] = False
+
     # -- residency ---------------------------------------------------------
     def resident_blocks(self) -> np.ndarray:
         return np.flatnonzero(self.slot_of >= 0)
@@ -191,7 +210,7 @@ class PagedKVPool:
                 raise AssertionError(f"dangling slot {s}")
 
     # -- the per-step batched paging transaction ---------------------------
-    def step(self, needed) -> dict:
+    def step(self, needed, hint_path: str = "/serve/kv_cache") -> dict:
         """Ensure residency for the whole batch's block demand, in one shot.
 
         ``needed`` — logical block ids every request in the step reads or
@@ -202,23 +221,68 @@ class PagedKVPool:
         into slots directly: they carry no link traffic and are not billed
         as page-ins. Returns the step's paging counts.
         """
-        needed = np.unique(np.asarray(needed, np.int32))
-        if needed.size > self.hbm_capacity:
+        return self.step_multi([(hint_path, needed)])
+
+    def step_multi(self, groups) -> dict:
+        """One paging transaction for a *multi-tenant* step.
+
+        ``groups`` — ``[(hint_path, block_ids), ...]``, one entry per
+        hint scope with demand this step (the serving engine merges each
+        tenant's blocks under its hint path). Victims are picked jointly
+        (no group ever evicts another group's demand) and each group's
+        traffic is planned and billed under its own scope:
+
+          * opted-in scopes ride the duplex plan — page-ins co-issued
+            with the evictions they displace, one fused kernel pass when
+            both directions carry blocks;
+          * ``duplex_opt_in=False`` scopes (the paper's withdrawal, e.g.
+            the Redis read-heavy pattern) are planned serially and
+            executed through the single-direction dequant/quant halves
+            only — their traffic never enters a fused duplex call, and
+            their billed "duplex" time *is* the serial time (speedup 1).
+
+        Per-scope counters accumulate in ``stats["by_path"]``.
+        """
+        seen: set[int] = set()
+        per_group: list[tuple[str, np.ndarray]] = []
+        for path, ids in groups:
+            ids = np.asarray(ids, np.int32).reshape(-1)
+            uniq = [int(b) for b in dict.fromkeys(ids.tolist())
+                    if int(b) not in seen]
+            seen.update(uniq)
+            per_group.append((path, np.asarray(uniq, np.int32)))
+        all_needed = np.asarray(sorted(seen), np.int32)
+        if all_needed.size > self.hbm_capacity:
             raise ValueError(
-                f"step demands {needed.size} blocks but HBM holds "
+                f"step demands {all_needed.size} blocks but HBM holds "
                 f"{self.hbm_capacity}; cap the per-step working set")
         self.stats["steps"] += 1
-        missing = needed[self.slot_of[needed] < 0]
         report = {"page_ins": 0, "page_outs": 0}
-        if missing.size:
-            stale = missing[self._has_host[missing]]   # real page-ins
-            fresh = missing[~self._has_host[missing]]  # first installs
+        if all_needed.size:
+            n_missing = int((self.slot_of[all_needed] < 0).sum())
             free_slots = np.flatnonzero(self.block_at < 0)
-            n_evict = max(0, missing.size - free_slots.size)
-            victims = self._pick_victims(n_evict, needed)
-            report = self._execute(stale, fresh, victims,
-                                   free_slots[:missing.size])
-        self._touch(needed)
+            n_evict = max(0, n_missing - free_slots.size)
+            victims = self._pick_victims(n_evict, all_needed)
+            fcur = vcur = 0
+            for path, ids in per_group:
+                if ids.size == 0:
+                    continue
+                missing = ids[self.slot_of[ids] < 0]
+                if missing.size == 0:
+                    continue
+                stale = missing[self._has_host[missing]]   # real page-ins
+                fresh = missing[~self._has_host[missing]]  # first installs
+                n_free = min(missing.size, free_slots.size - fcur)
+                g_free = free_slots[fcur:fcur + n_free]
+                fcur += n_free
+                n_vict = missing.size - n_free
+                g_vict = victims[vcur:vcur + n_vict]
+                vcur += n_vict
+                r = self._execute(stale, fresh, g_vict, g_free,
+                                  hint_path=path)
+                report["page_ins"] += r["page_ins"]
+                report["page_outs"] += r["page_outs"]
+        self._touch(all_needed)
         return report
 
     def _pick_victims(self, k: int, keep: np.ndarray) -> np.ndarray:
@@ -235,18 +299,26 @@ class PagedKVPool:
         return order[:k].astype(np.int32)
 
     def _execute(self, stale: np.ndarray, fresh: np.ndarray,
-                 victims: np.ndarray, free_slots: np.ndarray) -> dict:
+                 victims: np.ndarray, free_slots: np.ndarray,
+                 hint_path: str = "/serve/kv_cache") -> dict:
         """Make ``stale + fresh`` resident, evicting ``victims``.
 
         Only real data moves: ``stale`` blocks (host copies from earlier
-        evictions) and *written* victims travel through the duplex plan +
-        one kernel pass. ``fresh`` blocks are zero-installed, and victims
-        that never received a ``write()`` just drop residency — neither
-        carries modelled or billed traffic. When one direction is empty
-        the pass is the single-direction dequant-only / quant-only kernel
-        half — no zero blocks are streamed through the dead half of the
-        fused grid (billing is unchanged: the plan already carries only
-        the real transfers).
+        evictions) and *written* victims travel through the plan + kernel
+        pass. ``fresh`` blocks are zero-installed, and victims that never
+        received a ``write()`` just drop residency — neither carries
+        modelled or billed traffic. When one direction is empty the pass
+        is the single-direction dequant-only / quant-only kernel half —
+        no zero blocks are streamed through the dead half of the fused
+        grid (billing is unchanged: the plan already carries only the
+        real transfers).
+
+        ``hint_path`` scopes planning and billing: a scope resolving
+        ``duplex_opt_in=False`` gets a *serial* plan (plan_kv_paging's
+        withdrawal) and is executed through the single-direction halves
+        even when both directions carry blocks — withdrawn traffic never
+        rides the fused duplex kernel, and its billed duplex time equals
+        its serial time.
         """
         victim_slots = self.slot_of[victims]
         outs = victims[self._dirty[victims]]       # real out traffic
@@ -255,25 +327,36 @@ class PagedKVPool:
         block_bytes = float(np.prod(self.block_shape) * 2)  # bf16
         in_deq = out_q = out_scale = None
         if stale.size or outs.size:
+            duplex_ok = self.engine.hints.resolve(
+                hint_path).resolved().duplex_opt_in
             plan = self.engine.plan_kv_paging(
                 needed_host_blocks=stale.tolist(),
                 evict_hbm_blocks=out_slots.tolist(),
                 free_hbm_blocks=np.concatenate(
                     [free_slots, silent_slots]).tolist(),
                 host_dst_blocks=outs.tolist(),
-                block_bytes=block_bytes)
+                block_bytes=block_bytes,
+                hint_path=hint_path)
             serial = plan_serial(
                 [s.page_in for s in plan.slots if s.page_in],
                 [s.page_out for s in plan.slots if s.page_out],
                 self.engine.link)
-            self.stats["duplex_us"] += plan.modelled_time_us()
-            self.stats["serial_us"] += serial.modelled_time_us()
-            self.stats["page_ins"] += int(stale.size)
-            self.stats["page_outs"] += int(outs.size)
-            self.stats["kernel_calls"] += 1
+            bp = self.stats["by_path"].setdefault(hint_path,
+                                                  _fresh_path_stats())
+            for st, key, val in (
+                    (self.stats, "duplex_us", plan.modelled_time_us()),
+                    (self.stats, "serial_us", serial.modelled_time_us()),
+                    (self.stats, "page_ins", int(stale.size)),
+                    (self.stats, "page_outs", int(outs.size)),
+                    (bp, "duplex_us", plan.modelled_time_us()),
+                    (bp, "serial_us", serial.modelled_time_us()),
+                    (bp, "page_ins", int(stale.size)),
+                    (bp, "page_outs", int(outs.size))):
+                st[key] += val
 
-            # ONE kernel pass over the step's real traffic.
-            if stale.size and outs.size:
+            # ONE kernel pass per direction pair over this scope's real
+            # traffic (fused when opted in and both directions are busy).
+            if stale.size and outs.size and duplex_ok:
                 # both directions busy: the fused duplex kernel, streams
                 # padded to a uniform grid.
                 in_q, in_scale, out_x = _gather_duplex(
@@ -281,15 +364,21 @@ class PagedKVPool:
                     jnp.asarray(stale), jnp.asarray(out_slots))
                 in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
                     in_q, in_scale, out_x)
-            elif stale.size:
-                # page-ins only: dequant half, exactly stale.size blocks.
-                in_q, in_scale = _gather_in(self.host_q, self.host_scale,
-                                            jnp.asarray(stale))
-                in_deq = kernel_ops.dequant_kv_stream(in_q, in_scale)
+                self.stats["kernel_calls"] += 1
+                bp["fused_calls"] += 1
             else:
-                # page-outs only: quant half, exactly outs.size blocks.
-                out_q, out_scale = kernel_ops.quant_kv_stream(
-                    self.hbm[jnp.asarray(out_slots)])
+                # single-direction halves: exactly the real blocks per
+                # direction, never the fused grid (withdrawn scopes take
+                # this path even with both directions busy).
+                if outs.size:
+                    out_q, out_scale = kernel_ops.quant_kv_stream(
+                        self.hbm[jnp.asarray(out_slots)])
+                    self.stats["kernel_calls"] += 1
+                if stale.size:
+                    in_q, in_scale = _gather_in(
+                        self.host_q, self.host_scale, jnp.asarray(stale))
+                    in_deq = kernel_ops.dequant_kv_stream(in_q, in_scale)
+                    self.stats["kernel_calls"] += 1
 
         if victims.size:
             self.block_at[victim_slots] = -1
@@ -350,10 +439,15 @@ class PagedKVPool:
         return self.hbm[jnp.asarray(slots)]
 
     # -- reporting ---------------------------------------------------------
-    def duplex_speedup(self) -> float:
-        if self.stats["duplex_us"] == 0:
+    def duplex_speedup(self, hint_path: str | None = None) -> float:
+        """Modelled serial/duplex link-time ratio — overall, or for one
+        hint scope's traffic (``stats["by_path"]``). Withdrawn scopes
+        report exactly 1.0: their duplex time *is* the serial time."""
+        st = (self.stats if hint_path is None
+              else self.stats["by_path"].get(hint_path, _fresh_path_stats()))
+        if st["duplex_us"] == 0:
             return 1.0
-        return self.stats["serial_us"] / self.stats["duplex_us"]
+        return st["serial_us"] / st["duplex_us"]
 
     def reset_stats(self) -> None:
         self.stats = _fresh_stats()

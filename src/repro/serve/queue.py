@@ -38,13 +38,40 @@ STATE_OF_CODE = {S_PREFILL: PREFILL, S_DECODE: DECODE, S_DONE: DONE}
 _rid = itertools.count()
 
 
+@dataclasses.dataclass(frozen=True)
+class TrafficProfile:
+    """Declared link-traffic profile of one non-LLM tenant request.
+
+    The queue presents every waiting request to the admission policy as a
+    stream. LLM requests derive their backlog from prompt/generation
+    lengths; tenant requests (KV store, vector search) declare theirs
+    directly — total remaining bytes per direction plus the head-of-queue
+    (next-step) mix, the BPF task-profile analogue the duplex-aware
+    policies read at dispatch time.
+    """
+    backlog_read: float = 0.0
+    backlog_write: float = 0.0
+    head_read: float = 0.0
+    head_write: float = 0.0
+
+
 @dataclasses.dataclass(eq=False)
 class Request:
-    """One generation request moving through the serving engine."""
+    """One request moving through the serving engine.
+
+    ``tenant`` names the workload the request belongs to: ``"llm"`` for
+    generation requests served by the engine's decode slots, or the name
+    of an attached ``WorkloadAPI`` tenant (KV store, vector search), in
+    which case ``work`` carries the tenant-specific payload and
+    ``profile`` its declared traffic profile.
+    """
     prompt: np.ndarray                  # (P,) int32 prompt token ids
     max_new_tokens: int
     arrival_step: int = 0
-    hint_path: str = "/serve/prefill"
+    hint_path: str = "/serve/llm/prefill"
+    tenant: str = "llm"
+    work: object = None                 # tenant payload (non-LLM requests)
+    profile: TrafficProfile | None = None
     rid: int = dataclasses.field(default_factory=lambda: next(_rid))
     state: str = WAITING
     consumed: int = 0                   # prompt tokens fed so far
@@ -142,6 +169,13 @@ class RequestQueue:
         for i, cur in enumerate(self._slots):
             if cur is None:
                 self._slots[i] = req
+                # cgroup-hint bootstrap (§4.5): the request's declared
+                # read fraction seeds the policy's per-slot forecast so
+                # stateful policies are precise from step 0 (no-op for
+                # stateless ones).
+                h = self.hints.resolve(req.hint_path).resolved()
+                self._state = policies_lib.seed_read_fraction(
+                    self._state, i, h.read_fraction)
                 return req
         raise RuntimeError(f"request queue full ({self.capacity})")
 
@@ -168,13 +202,22 @@ class RequestQueue:
             if r is None or r.arrival_step > now:
                 continue
             arrived[i] = True
-            # prefill writes the prompt's KV; decode then re-reads the
-            # whole cache once per generated token (triangular sum).
-            n_p, n_g = r.prompt_len, r.max_new_tokens
-            backlog_w[i] = n_p * self.kv_bytes
-            backlog_r[i] = (n_g * n_p + n_g * (n_g + 1) / 2) * self.kv_bytes
-            head_w[i] = min(n_p, 4) * self.kv_bytes
-            head_r[i] = 0.0
+            if r.profile is not None:
+                # tenant request: declared traffic profile (bytes).
+                backlog_r[i] = r.profile.backlog_read
+                backlog_w[i] = r.profile.backlog_write
+                head_r[i] = r.profile.head_read
+                head_w[i] = r.profile.head_write
+            else:
+                # LLM request: prefill writes the prompt's KV; decode then
+                # re-reads the whole cache once per generated token
+                # (triangular sum).
+                n_p, n_g = r.prompt_len, r.max_new_tokens
+                backlog_w[i] = n_p * self.kv_bytes
+                backlog_r[i] = (n_g * n_p + n_g * (n_g + 1) / 2) \
+                    * self.kv_bytes
+                head_w[i] = min(n_p, 4) * self.kv_bytes
+                head_r[i] = 0.0
             h = self.hints.resolve(r.hint_path).resolved()
             hint_rf[i] = h.read_fraction
             hint_pri[i] = h.priority
@@ -197,9 +240,21 @@ class RequestQueue:
         )
         return obs, arrived
 
-    def dispatch(self, now: int, n_free: int) -> list[Request]:
-        """Admit up to ``n_free`` arrived requests, policy-ordered."""
-        if n_free <= 0 or not self.waiting(now):
+    def dispatch(self, now: int,
+                 n_free: int | dict[str, int]) -> list[Request]:
+        """Admit arrived requests, policy-ordered.
+
+        ``n_free`` is either an int — a tenant-agnostic slot budget
+        (legacy single-tenant callers) — or a dict mapping tenant name to
+        that tenant's free slots; the policy ranks the whole waiting set
+        and the top-weighted requests are taken while their tenant's
+        budget lasts (a full tenant never blocks admission of another's
+        requests).
+        """
+        budgets = dict(n_free) if isinstance(n_free, dict) else None
+        cap = (sum(budgets.values()) if budgets is not None
+               else int(n_free))
+        if cap <= 0 or not self.waiting(now):
             return []
         obs, arrived = self._observe(now)
         self._state, w = self._schedule_fn(self._state, obs)
@@ -211,7 +266,16 @@ class RequestQueue:
             np.flatnonzero(arrived).tolist(),
             key=lambda i: (-w[i], self._slots[i].arrival_step,
                            self._slots[i].rid))
-        take = order[:n_free]
+        take = []
+        for i in order:
+            if len(take) >= cap:
+                break
+            if budgets is not None:
+                t = self._slots[i].tenant
+                if budgets.get(t, 0) <= 0:
+                    continue
+                budgets[t] -= 1
+            take.append(i)
         admitted = []
         moved_r = np.zeros((self.capacity,), np.float32)
         moved_w = np.zeros((self.capacity,), np.float32)
@@ -221,11 +285,15 @@ class RequestQueue:
             req.state = PREFILL
             req.admitted_step = now
             admitted.append(req)
-            moved_w[i] = req.prompt_len * self.kv_bytes
+            if req.profile is not None:
+                moved_r[i] = req.profile.head_read
+                moved_w[i] = req.profile.head_write
+            else:
+                moved_w[i] = req.prompt_len * self.kv_bytes
         fb = policies_lib.Feedback(
             moved_read=jnp.asarray(moved_r),
             moved_write=jnp.asarray(moved_w),
-            utilization=jnp.float32(min(1.0, len(take) / max(n_free, 1))))
+            utilization=jnp.float32(min(1.0, len(take) / max(cap, 1))))
         self._state = self._update_fn(self._state, fb)
         self._reset_slot_state(take)
         return admitted

@@ -61,6 +61,90 @@ class TestSerialization:
         assert t2.resolve("/x/y") == t.resolve("/x/y")
 
 
+_hints = st.builds(
+    MemoryHint,
+    read_fraction=st.one_of(st.none(), st.floats(0, 1)),
+    sequential=st.one_of(st.none(), st.booleans()),
+    priority=st.one_of(st.none(), st.floats(0.1, 10)),
+    phase_period_us=st.one_of(st.none(), st.floats(0, 1e4)),
+    duplex_opt_in=st.one_of(st.none(), st.booleans()),
+)
+_segments = st.lists(st.sampled_from(["a", "b", "serve", "llm", "x1"]),
+                     min_size=1, max_size=5)
+
+
+def _path(segments):
+    return "/" + "/".join(segments)
+
+
+class TestResolutionProperties:
+    """Property-based contracts of hierarchical resolution: inheritance
+    is idempotent, children win, re-registration replaces, and
+    ``resolved()`` never leaves an unset field — at any depth."""
+
+    @settings(max_examples=50, deadline=None)
+    @given(segs=_segments, hints=st.lists(_hints, min_size=1, max_size=5))
+    def test_resolved_never_none(self, segs, hints):
+        t = HintTree()
+        # register hints along every prefix of the path, then resolve a
+        # strictly deeper, never-registered leaf.
+        for i, h in enumerate(hints):
+            t.set(_path(segs[:1 + i % len(segs)]), h)
+        deep = _path(segs) + "/unregistered/leaf"
+        for path in [deep] + [_path(segs[:i + 1])
+                              for i in range(len(segs))]:
+            r = t.resolve(path)
+            assert all(getattr(r, f) is not None for f in MemoryHint.FIELDS)
+
+    @settings(max_examples=50, deadline=None)
+    @given(h=_hints)
+    def test_merge_is_idempotent(self, h):
+        assert h.merged_over(h) == h
+        assert h.resolved().resolved() == h.resolved()
+
+    @settings(max_examples=50, deadline=None)
+    @given(segs=_segments, parent=_hints, child=_hints)
+    def test_child_wins_unset_inherits(self, segs, parent, child):
+        t = HintTree()
+        t.set(_path(segs), parent)
+        t.set(_path(segs + ["leaf"]), child)
+        r = t.resolve(_path(segs + ["leaf"]))
+        for f in MemoryHint.FIELDS:
+            want = getattr(child, f)
+            if want is None:
+                want = getattr(parent, f)
+            if want is None:
+                want = getattr(SYSTEM_DEFAULT, f)
+            assert getattr(r, f) == want
+
+    @settings(max_examples=50, deadline=None)
+    @given(segs=_segments, first=_hints, second=_hints)
+    def test_reregistration_replaces(self, segs, first, second):
+        """set() on an existing scope fully replaces its hint — the
+        resolution equals a tree that only ever saw the second hint."""
+        t = HintTree()
+        t.set(_path(segs), first)
+        t.set(_path(segs), second)
+        fresh = HintTree()
+        fresh.set(_path(segs), second)
+        deep = _path(segs) + "/below"
+        assert t.resolve(_path(segs)) == fresh.resolve(_path(segs))
+        assert t.resolve(deep) == fresh.resolve(deep)
+
+    @settings(max_examples=50, deadline=None)
+    @given(segs=_segments, hints=st.lists(_hints, min_size=2, max_size=5))
+    def test_resolution_equals_stepwise_merge(self, segs, hints):
+        """Root-to-leaf resolution is exactly the left fold of
+        merged_over along the registered ancestry."""
+        t = HintTree()
+        for i in range(len(segs)):
+            t.set(_path(segs[:i + 1]), hints[i % len(hints)])
+        merged = MemoryHint().merged_over(SYSTEM_DEFAULT)
+        for i in range(len(segs)):
+            merged = hints[i % len(hints)].merged_over(merged)
+        assert t.resolve(_path(segs)) == merged
+
+
 class TestDefaults:
     def test_training_defaults(self):
         t = default_training_hints()
@@ -73,3 +157,17 @@ class TestDefaults:
         assert t.resolve("/serve/attention").read_fraction == 0.85
         assert t.resolve("/serve/ffn").read_fraction == 0.60
         assert t.resolve("/serve/prefill").duplex_opt_in is False
+
+    def test_tenant_scopes(self):
+        """Multi-tenant serving scopes: the unidirectional Redis patterns
+        withdraw duplex intervention; the mixed ones stay opted in."""
+        t = default_serving_hints()
+        assert t.resolve("/serve/llm/prefill").duplex_opt_in is False
+        assert t.resolve("/serve/redis/read_heavy").duplex_opt_in is False
+        assert t.resolve("/serve/redis/write_heavy").duplex_opt_in is False
+        for scope in ("/serve/redis/seq", "/serve/redis/pipelined",
+                      "/serve/redis/gaussian", "/serve/vectordb"):
+            assert t.resolve(scope).duplex_opt_in is True
+        assert t.resolve("/serve/redis/seq/read").read_fraction == 0.95
+        assert t.resolve("/serve/redis/seq/write").read_fraction == 0.05
+        assert t.resolve("/serve/vectordb/results").read_fraction == 0.1

@@ -157,3 +157,44 @@ class TestDuplexStream:
         err = np.max(np.abs(np.asarray(back) - np.asarray(x)))
         amax = np.max(np.abs(np.asarray(x)))
         assert err <= amax / 127.0 * 1.01    # half-LSB bound (+bf16 slack)
+
+
+class TestL2Distance:
+    """Batched gather + distance kernel (vector-search tenant)."""
+
+    @pytest.mark.parametrize("Q,N,T,D", [(4, 3, 16, 64), (1, 1, 8, 128),
+                                         (8, 5, 32, 32)])
+    def test_vs_oracle(self, Q, N, T, D):
+        q = jax.random.normal(jax.random.fold_in(KEY, 20), (Q, D))
+        blocks = jax.random.normal(jax.random.fold_in(KEY, 21),
+                                   (N, T, D)).astype(jnp.bfloat16)
+        got = ops.l2_distance(q, blocks)
+        gold = ref.l2_distance(q, blocks)
+        assert got.shape == (N, Q, T)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(gold),
+                                   rtol=1e-4, atol=1e-3)
+
+    def test_zero_distance_to_self(self):
+        """A query equal to a stored vector has (near-)zero distance —
+        the matmul expansion must not lose it to cancellation."""
+        blocks = jax.random.normal(jax.random.fold_in(KEY, 22),
+                                   (2, 8, 64)).astype(jnp.bfloat16)
+        q = blocks[1, 3][None].astype(jnp.float32)
+        d = np.asarray(ops.l2_distance(q, blocks))
+        assert d[1, 0, 3] == d.min()
+        assert d[1, 0, 3] <= 1e-2
+
+    def test_composes_under_jit(self):
+        """The engine calls the kernel from inside jitted tenant
+        programs — one fused program, no retrace across calls."""
+        q = jax.random.normal(jax.random.fold_in(KEY, 23), (4, 64))
+        blocks = jax.random.normal(jax.random.fold_in(KEY, 24),
+                                   (3, 16, 64)).astype(jnp.bfloat16)
+
+        @jax.jit
+        def best(qq, bb):
+            return jnp.min(ops.l2_distance(qq, bb), axis=(0, 2))
+
+        got = np.asarray(best(q, blocks))
+        gold = np.asarray(ref.l2_distance(q, blocks)).min(axis=(0, 2))
+        np.testing.assert_allclose(got, gold, rtol=1e-4, atol=1e-3)

@@ -1,0 +1,236 @@
+"""Multi-tenant serving: KV-store and vector-search tenants on the real
+paged data plane — op streams execute, data is real, LLM decode stays
+exact, and duplex withdrawal (duplex_opt_in=False) keeps opted-out
+traffic off the fused duplex kernel with honest billing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import registry as R
+from repro.serve import (EngineConfig, KVStoreTenant, ServeEngine,
+                         VectorSearchTenant, reference_decode)
+from repro.serve.workloads import _synth_blocks, kv_value_seed
+
+
+@pytest.fixture(scope="module")
+def api():
+    return R.build("smollm-135m", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params(api):
+    return api.init(jax.random.PRNGKey(0))
+
+
+def _engine(api, params, *, hbm=14, pool=96, batch=2, policy="hinted"):
+    return ServeEngine(api, params, EngineConfig(
+        max_batch=batch, cache_len=64, block_tokens=4, hbm_blocks=hbm,
+        pool_blocks=pool, prefill_chunk=2, max_queue=16, policy=policy))
+
+
+class TestKVStoreTenant:
+    def test_op_streams_execute_real_data(self, api, params):
+        """SET values really land in pool blocks (write-through the same
+        data plane as LLM KV), GETs fold them into the device checksum,
+        and every submitted op stream completes."""
+        eng = _engine(api, params)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                          store_blocks=16))
+        reqs = [kv.submit("gaussian", n_steps=30) for _ in range(2)]
+        eng.run(max_steps=200)
+        assert all(r.rid in eng.completed for r in reqs)
+        assert kv.ops_done > 0
+        assert kv.result() != 0.0           # GETs really read data
+        # resident store blocks hold exactly the synthesized values of
+        # their latest SET version (int8 round-trip tolerance for blocks
+        # that travelled through the host tier).
+        T, D = eng.pool.block_shape
+        checked = 0
+        for b in kv._store:
+            slot = eng.pool.slot_of[b]
+            if slot < 0 or b not in kv._version:
+                continue
+            want = np.asarray(_synth_blocks(
+                jnp.asarray([kv_value_seed(b, kv._version[b])], np.int32),
+                tokens=T, dims=D)[0], np.float32)
+            got = np.asarray(eng.pool.hbm[slot], np.float32)
+            assert np.abs(got - want).max() <= 1.0 / 127.0 + 0.05
+            checked += 1
+        assert checked > 0
+
+    def test_paging_traffic_flows_through_pool(self, api, params):
+        """A store larger than the pool's HBM forces real page traffic —
+        billed under the tenant's hint scope."""
+        eng = _engine(api, params, hbm=6)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                          store_blocks=16))
+        for _ in range(2):
+            kv.submit("gaussian", n_steps=30)
+        eng.run(max_steps=200)
+        st = eng.paging_stats()
+        path = st["by_path"].get("/serve/redis/gaussian")
+        assert path is not None
+        assert path["page_ins"] > 0 and path["page_outs"] > 0
+        eng.pool.check_invariants()
+
+    def test_five_patterns_produce_schedules(self, api, params):
+        eng = _engine(api, params)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=5, ops_per_step=2,
+                                          store_blocks=8))
+        for pattern in ("read_heavy", "write_heavy", "pipelined",
+                        "sequential", "gaussian"):
+            req = kv.submit(pattern, n_steps=16)
+            sched = req.work.schedule
+            assert sched.shape == (16, 2)
+            assert sched.sum() > 0
+            assert req.hint_path.startswith("/serve/redis/")
+
+    def test_sequential_streams_alternate_phase_and_scope(self, api,
+                                                          params):
+        eng = _engine(api, params)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=2))
+        a = kv.submit("sequential", n_steps=32)
+        b = kv.submit("sequential", n_steps=32)
+        assert a.hint_path == "/serve/redis/seq/read"
+        assert b.hint_path == "/serve/redis/seq/write"
+        # opposite leading directions: a starts reading, b starts writing
+        assert a.work.schedule[0, 0] > 0 and a.work.schedule[0, 1] == 0
+        assert b.work.schedule[0, 1] > 0 and b.work.schedule[0, 0] == 0
+
+
+class TestMixedTenantExactness:
+    def test_llm_decode_unchanged_by_tenant_traffic(self, api, params):
+        """Acceptance: tenant paging/compute sharing the pool must not
+        perturb LLM generation — token-for-token identical to the
+        static-batch reference."""
+        prompts = jax.random.randint(jax.random.PRNGKey(21), (3, 6), 0,
+                                     api.cfg.vocab)
+        ref = np.asarray(reference_decode(api, params, prompts, 10,
+                                          cache_len=64))
+        eng = _engine(api, params, hbm=16, batch=3)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                          store_blocks=12))
+        vec = eng.add_tenant(VectorSearchTenant(
+            n_slots=1, visits_per_step=2, data_blocks=8))
+        rids = [eng.submit(np.asarray(prompts[i]), 10,
+                           arrival_step=2 * i).rid for i in range(3)]
+        kv.submit("sequential", n_steps=30)
+        kv.submit("sequential", n_steps=30)
+        vec.submit(n_steps=24)
+        outs = eng.run(max_steps=300)
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(outs[rid], ref[i])
+        assert kv.ops_done > 0 and vec.queries_done > 0
+        eng.pool.check_invariants()
+
+
+class TestDuplexWithdrawal:
+    """Satellite: a tenant whose hint scope resolves duplex_opt_in=False
+    (the paper's read-heavy Redis withdrawal) is never routed through
+    duplex paging — only the single-direction dequant/quant halves — and
+    billing stays honest (its duplex time IS the serial time)."""
+
+    def test_opted_out_tenant_never_fused(self, api, params,
+                                          kernel_call_counter):
+        eng = _engine(api, params, hbm=6)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                          store_blocks=16))
+        kv.preload(16)
+        for _ in range(2):
+            kv.submit("read_heavy", n_steps=40)
+        del kernel_call_counter[:]          # drop the preload's traffic
+        eng.run(max_steps=300)
+        st = eng.paging_stats()
+        path = st["by_path"]["/serve/redis/read_heavy"]
+        # traffic flowed and was billed...
+        assert path["page_ins"] > 0 and path["page_outs"] > 0
+        assert path["duplex_us"] > 0
+        # ...but never through the fused duplex kernel, and with zero
+        # modelled duplex benefit.
+        assert path["fused_calls"] == 0
+        assert path["duplex_us"] == pytest.approx(path["serial_us"])
+        assert eng.pool.duplex_speedup("/serve/redis/read_heavy") == 1.0
+        assert all(name != "duplex_kv_stream"
+                   for name, _ in kernel_call_counter)
+
+    def test_withdrawal_is_per_scope_not_global(self, api, params):
+        """An opted-out tenant coexisting with opted-in traffic must not
+        drag the opted-in scopes onto the serial path (and vice versa)."""
+        eng = _engine(api, params, hbm=8)
+        kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                          store_blocks=20))
+        kv.preload(20)
+        kv.submit("read_heavy", n_steps=48)
+        kv.submit("gaussian", n_steps=48)
+        eng.run(max_steps=300)
+        by_path = eng.paging_stats()["by_path"]
+        out = by_path["/serve/redis/read_heavy"]
+        opted_in = by_path["/serve/redis/gaussian"]
+        assert out["fused_calls"] == 0
+        assert out["duplex_us"] == pytest.approx(out["serial_us"])
+        assert opted_in["fused_calls"] > 0
+        assert opted_in["duplex_us"] < opted_in["serial_us"]
+
+
+class TestVectorSearchTenant:
+    def test_best_distances_match_bruteforce(self, api, params):
+        """The walk's device-resident minima equal a brute-force scan of
+        the visited blocks' synthesized vectors."""
+        eng = _engine(api, params, hbm=16)   # dataset stays resident
+        vec = eng.add_tenant(VectorSearchTenant(
+            n_slots=1, n_queries=3, visits_per_step=2, data_blocks=6,
+            load_per_step=2, result_every=4))
+        req = vec.submit(n_steps=20)
+        eng.run(max_steps=100)
+        res = vec.result()
+        best = res["best"][req.rid]
+        T, D = eng.pool.block_shape
+        seeds = jnp.asarray([vec.data_seed(i)
+                             for i in sorted(req.work.visited)], np.int32)
+        data = np.asarray(_synth_blocks(seeds, tokens=T, dims=D),
+                          np.float32).reshape(-1, D)
+        q = np.asarray(req.work.queries, np.float32)
+        want = ((q[:, None, :] - data[None, :, :]) ** 2).sum(-1).min(1)
+        np.testing.assert_allclose(best, want, rtol=1e-2,
+                                   atol=0.05 * D / 32)
+        assert res["checksum"] > 0
+
+    def test_result_writeback_creates_write_traffic(self, api, params):
+        """The distance-cache write-back is real pool traffic under the
+        /serve/vectordb/results scope — the §6.5 write bursts."""
+        eng = _engine(api, params, hbm=6)
+        vec = eng.add_tenant(VectorSearchTenant(
+            n_slots=1, visits_per_step=2, data_blocks=12,
+            load_per_step=1, result_every=3))
+        vec.submit(n_steps=30)
+        eng.run(max_steps=100)
+        st = eng.paging_stats()
+        assert st["page_ins"] > 0 and st["page_outs"] > 0
+        assert st["duplex_speedup"] > 1.0    # walk reads overlap writes
+        eng.pool.check_invariants()
+
+
+class TestWorkloadAPIErrors:
+    def test_submit_before_bind_raises(self):
+        kv = KVStoreTenant()
+        with pytest.raises(RuntimeError, match="not attached"):
+            kv.submit("gaussian", n_steps=4)
+
+    def test_unpaged_engine_rejects_tenants(self, api, params):
+        eng = ServeEngine(api, params, EngineConfig(
+            max_batch=2, cache_len=64, paging=False))
+        with pytest.raises(ValueError, match="paged"):
+            eng.add_tenant(KVStoreTenant())
+
+    def test_duplicate_tenant_name_rejected(self, api, params):
+        eng = _engine(api, params)
+        eng.add_tenant(KVStoreTenant(n_slots=1, ops_per_step=1))
+        with pytest.raises(ValueError, match="already taken"):
+            eng.add_tenant(KVStoreTenant(n_slots=1, ops_per_step=1))
+
+    def test_tenant_reservation_bounded_by_hbm(self, api, params):
+        eng = _engine(api, params, hbm=4)
+        with pytest.raises(ValueError, match="reserve"):
+            eng.add_tenant(KVStoreTenant(n_slots=4, ops_per_step=2))
