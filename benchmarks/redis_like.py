@@ -10,12 +10,25 @@ policy (``cfs`` baseline vs the hint-seeded ``hinted`` policy), and the
 withdrawal scopes (`/serve/redis/{read,write}_heavy`) keep the
 unidirectional patterns off the fused duplex kernel.
 
-Reported per pattern: real wall-clock Mops/s and each policy's modelled
-serial/duplex speedup — its bandwidth-normalized exploitation of the
-full-duplex link (traffic volumes differ across policies, so raw link
-time is not comparable; the speedup ratio is). Paper: +7.4% avg
-throughput (+150% sequential, +69% pipelined; read-heavy neutral *with*
-withdrawal), -6% avg p99.
+Requests are *service-driven* (``n_ops``): every stream must deliver the
+same op budget, with ops queued behind the per-direction duplex service
+budget, and all streams arrive together into fewer tenant slots than
+streams — so per-pattern ``latency_steps`` (arrival -> completion) is a
+real measurement of how fast each pattern's direction mix drains under
+each policy's admission pairing, and ``link_imp`` is the measured
+hinted-vs-cfs delta of the modelled serial/duplex ratio (its
+bandwidth-normalized exploitation of the full-duplex link). Paper: +7.4%
+avg throughput (+150% sequential, +69% pipelined; read-heavy neutral
+*with* withdrawal), -6% avg p99.
+
+Known measured trade-off (committed knowingly): on ``sequential``,
+hinted's balanced read/write pairing drains ops faster — the latency
+A/B improves (``latency_imp`` > 0, the paper's serving metric) — but
+its *paging* mix gets more write-dominated (balanced SET service means
+more full-block invalidations, which suppress page-ins), so the link
+overlap ratio ``link_imp`` goes negative. The two metrics answer
+different questions; latency is the headline, link_imp is the honest
+per-policy overlap measurement, and both are reported.
 """
 
 from __future__ import annotations
@@ -44,7 +57,7 @@ def _drive(api, params, pattern: str, policy: str, n_streams: int,
     eng = ServeEngine(api, params, EngineConfig(
         max_batch=2, cache_len=64, block_tokens=4, hbm_blocks=10,
         pool_blocks=128, prefill_chunk=2,
-        max_queue=max(16, n_streams + 2), policy=policy))
+        max_queue=max(16, n_streams + 2), policy=policy, megastep=8))
     kv = eng.add_tenant(KVStoreTenant(
         n_slots=4, ops_per_step=2, store_blocks=24, seed=seed))
     kv.preload(24)
@@ -54,18 +67,32 @@ def _drive(api, params, pattern: str, policy: str, n_streams: int,
         # submit order a fair FIFO baseline admits unbalanced.
         phase = ("read" if i < n_streams // 2 else "write") \
             if pattern == "sequential" else None
-        kv.submit(pattern, n_steps=steps, phase=phase)
+        # service-driven completion: every stream must deliver the same
+        # op budget over a generous schedule horizon, with ops queued
+        # behind the per-direction duplex service budget. All streams
+        # arrive together and outnumber the tenant slots, so the
+        # admission policy really chooses the running set: a
+        # duplex-aware policy pairs opposite-direction streams (full
+        # service rate), a direction-oblivious one admits in submit
+        # order. Both the completion step and the link overlap are then
+        # per-pattern, per-policy measurements rather than shared
+        # schedule constants.
+        kv.submit(pattern, n_steps=6 * steps, n_ops=steps,
+                  arrival_step=0, phase=phase)
     t0 = time.monotonic()
     eng.run(max_steps=10_000)
     dt = time.monotonic() - t0
     link = aggregate_link_stats(eng.paging_stats(), "/serve/redis")
-    # latency proxy: mean queue-to-completion residency in engine steps
-    # (arrival -> done), the serving analogue of the paper's p99 story.
+    # latency: mean queue-to-completion residency in engine steps
+    # (arrival -> done), the serving analogue of the paper's p99 story —
+    # measured per pattern from each request's actual completion step.
     done = list(kv.completed.values())
     lat = (sum(r.done_step - r.arrival_step for r in done)
            / max(len(done), 1))
     return {"ops": kv.ops_done, "wall_s": dt, "link": link,
             "latency_steps": lat,
+            "host_dispatches": eng.stats()["host_dispatches"],
+            "steps": eng.step_count,
             "speedup": (link["serial_us"] / link["duplex_us"]
                         if link["duplex_us"] else 1.0)}
 
@@ -76,9 +103,15 @@ def run(smoke: bool = False) -> Bench:
     n_streams = 4 if smoke else 6
     api = R.build("smollm-135m", smoke=True)
     params = api.init(jax.random.PRNGKey(0))
+    # warmup mirrors a measured drive per policy cell (the llm
+    # benchmark's convention) so the per-pattern rows below measure
+    # steady-state serving, not XLA compile time
+    for policy in ("cfs", "hinted"):
+        _drive(api, params, "gaussian", policy, n_streams, steps)
     rows = []
     section = {}
     imps = []
+    lat_imps = []
     for pattern in PAPER_THROUGHPUT:
         t0 = time.monotonic()
         res = {policy: _drive(api, params, pattern, policy, n_streams,
@@ -97,6 +130,7 @@ def run(smoke: bool = False) -> Bench:
         lat_imp = (c["latency_steps"] - h["latency_steps"]) \
             / max(c["latency_steps"], 1e-9)
         imps.append(imp)
+        lat_imps.append(lat_imp)
         rows.append([pattern, round(mops, 3), round(c["speedup"], 4),
                      round(h["speedup"], 4), round(imp, 4),
                      round(c["latency_steps"], 1),
@@ -105,7 +139,8 @@ def run(smoke: bool = False) -> Bench:
         section[pattern] = {"mops": round(mops, 3),
                             "duplex_speedup": round(h["speedup"], 4),
                             "link_imp": round(imp, 4),
-                            "latency_steps": round(h["latency_steps"], 1)}
+                            "latency_steps": round(h["latency_steps"], 1),
+                            "latency_imp": round(lat_imp, 4)}
         b.row(pattern, us,
               f"{h['ops']} ops {mops:.2f} Mops/s; duplex_speedup "
               f"cfs {c['speedup']:.2f}x -> hinted {h['speedup']:.2f}x "
@@ -121,7 +156,9 @@ def run(smoke: bool = False) -> Bench:
                "cfs_latency_steps", "hinted_latency_steps", "page_ins",
                "page_outs"], rows)
     avg = sum(imps) / len(imps)
-    return b.done(f"avg link imp={avg:+.1%} (paper +7.4%)")
+    avg_lat = sum(lat_imps) / len(lat_imps)
+    return b.done(f"avg link imp={avg:+.1%} (paper +7.4%), avg latency "
+                  f"imp={avg_lat:+.1%} (paper -6% p99)")
 
 
 if __name__ == "__main__":

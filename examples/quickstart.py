@@ -11,14 +11,15 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import channel as ch
 from repro.core import scheduler as sched
 from repro.core.requests import StreamSpec
 from repro.models import registry as R
 from repro.optim import AdamWConfig
-from repro.runtime.serve import DecodeServer, ServeConfig
 from repro.runtime.train import TrainConfig, Trainer
+from repro.serve import EngineConfig, ServeEngine
 
 
 def act1_characterize():
@@ -57,10 +58,15 @@ def act3_train_and_serve():
           f"{api.param_count / 1e6:.1f}M-family")
     print(f"  loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f} "
           f"over {len(hist)} steps")
-    server = DecodeServer(api, params, ServeConfig(cache_len=64))
-    out = server.generate(jnp.ones((2, 4), jnp.int32), 12)
-    print(f"  served {out.shape[0]}x{out.shape[1]} greedy tokens: "
-          f"{out[0][:8].tolist()}...")
+    engine = ServeEngine(api, params, EngineConfig(
+        max_batch=2, cache_len=64, megastep=4))
+    rids = [engine.submit(np.ones(4, np.int32), 12).rid
+            for _ in range(2)]
+    outs = engine.run()
+    st = engine.stats()
+    print(f"  served {len(rids)}x{len(outs[rids[0]])} greedy tokens in "
+          f"{st['steps']} steps / {st['host_dispatches']} host "
+          f"dispatches: {outs[rids[0]][:8].tolist()}...")
 
 
 if __name__ == "__main__":

@@ -36,6 +36,7 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Obs(NamedTuple):
@@ -495,3 +496,59 @@ def migration_volume(prev_w: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
     """L1 weight reallocation per step — the migration overhead proxy that
     the simulator charges against channel capacity (cache disruption)."""
     return 0.5 * jnp.sum(jnp.abs(w - prev_w))
+
+
+# ---------------------------------------------------------------------------
+# megastep feedback aggregation — K per-step Feedbacks folded in one call.
+# ---------------------------------------------------------------------------
+
+def stack_feedbacks(fbs: "list[Feedback] | tuple[Feedback, ...]") -> Feedback:
+    """Aggregate K per-step ``Feedback``s into one megastep feedback.
+
+    The aggregate is a *stacked* feedback — every leaf gains a leading
+    step axis ``(K, ...)`` — not a lossy sum: policy updates are not
+    linear in the feedback (vruntime is normalized per step), so the only
+    aggregation that preserves per-step semantics is the ordered fold.
+    Apply it with ``fold_feedback``; ``update(state, stack([fb]))`` for a
+    single step is identical to ``update(state, fb)``.
+    """
+    if not fbs:
+        raise ValueError("stack_feedbacks needs at least one Feedback")
+
+    def stack(leaves):
+        if all(isinstance(x, (np.ndarray, np.generic, float, int))
+               for x in leaves):
+            # host-side feedbacks (the engine's megastep accumulator):
+            # stack on host, one device transfer per leaf instead of one
+            # per (leaf, step).
+            return jnp.asarray(np.stack([np.asarray(x) for x in leaves]))
+        return jnp.stack([jnp.asarray(x) for x in leaves])
+
+    return Feedback(*(stack(leaves) for leaves in zip(*fbs)))
+
+
+def is_stacked(fb: Feedback) -> bool:
+    """True if ``fb`` carries a leading megastep axis (per-step feedbacks
+    have a scalar utilization; stacked ones a (K,) vector)."""
+    return jnp.asarray(fb.utilization).ndim >= 1
+
+
+def fold_feedback(policy: Policy, params: PolicyParams, state: Any,
+                  fb: Feedback) -> Any:
+    """Apply one feedback — or a whole megastep of them — to a policy.
+
+    A plain per-step ``Feedback`` is a single ``policy.update`` call. A
+    stacked feedback (see ``stack_feedbacks``) is folded through
+    ``update`` step by step with ``lax.scan`` — ONE traced program per
+    (policy, K) cell instead of K eager update dispatches, and by
+    construction exactly equal to the sequential per-step fold (the
+    megastep exactness contract; property-tested).
+    """
+    if not is_stacked(fb):
+        return policy.update(params, state, fb)
+
+    def body(s, f):
+        return policy.update(params, s, Feedback(*f)), None
+
+    state, _ = jax.lax.scan(body, state, tuple(fb))
+    return state

@@ -66,13 +66,19 @@ def _quant_kernel(out_x_ref, out_q_ref, out_scale_ref):
     out_scale_ref[...] = scale
 
 
-def _specs(n_blocks: int, T: int, D: int):
+def _specs(n_blocks: int, T: int, D: int, stage: int = 1):
+    """Per-grid-step block specs. ``stage`` is the staging-buffer depth:
+    each grid step DMAs a slab of ``stage`` pages per stream into VMEM
+    while the previous slab is being transformed (Pallas pipelines grid
+    steps through double-buffered staging automatically — a deeper slab
+    amortizes the per-transfer latency across more pages, the classic
+    double-buffer granularity knob)."""
     blk = lambda *shape: pl.BlockSpec(shape, lambda i: (i,) + (0,) * (
         len(shape) - 1))
     return {
-        "q": blk(1, T, D),
-        "scale": blk(1, T, 1),
-        "x": blk(1, T, D),
+        "q": blk(stage, T, D),
+        "scale": blk(stage, T, 1),
+        "x": blk(stage, T, D),
     }
 
 
@@ -116,9 +122,10 @@ def quant_stream(out_x, *, interpret: bool = False):
     )(out_x)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "fused"))
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "fused", "stage_blocks"))
 def duplex_kv_stream(in_q, in_scale, out_x, *, interpret: bool = False,
-                     fused: bool = True):
+                     fused: bool = True, stage_blocks: int = 1):
     """Fused duplex page-in/page-out transform.
 
     in_q: (N, T, D) int8 pages arriving from the host pool;
@@ -129,15 +136,27 @@ def duplex_kv_stream(in_q, in_scale, out_x, *, interpret: bool = False,
     ``fused=False`` runs the phase-separated two-kernel baseline — the
     stand-alone dequant/quant halves back to back (identical math; used
     for the §Perf A/B and in tests for equivalence).
+
+    ``stage_blocks`` is the staging-buffer variant used by the serving
+    pool's megastep paging: each pipelined grid step stages a slab of
+    that many pages per stream (both directions), so the automatic
+    double buffering prefetches the next slab of *both* streams while
+    the current one transforms — fewer, deeper DMA transfers for the
+    same elementwise math (N must be a multiple of ``stage_blocks``;
+    callers pad with zero pages they later drop).
     """
     N, T, D = in_q.shape
-    s = _specs(N, T, D)
+    if N % stage_blocks:
+        raise ValueError(
+            f"duplex stream length {N} is not a multiple of the staging "
+            f"depth {stage_blocks}; pad the streams")
+    s = _specs(N, T, D, stage=stage_blocks)
     dim_sem = CompilerParams(dimension_semantics=("arbitrary",))
 
     if fused:
         return pl.pallas_call(
             _duplex_kernel,
-            grid=(N,),
+            grid=(N // stage_blocks,),
             in_specs=[s["q"], s["scale"], s["x"]],
             out_specs=[s["x"], s["q"], s["scale"]],
             out_shape=[

@@ -28,11 +28,13 @@ def flash_attention(q, k, v, *, causal=True, window=None, prefix_len=0,
                                kv_block=kv_block, interpret=interpret)
 
 
-def duplex_kv_stream(in_q, in_scale, out_x, *, fused=True, interpret=None):
+def duplex_kv_stream(in_q, in_scale, out_x, *, fused=True, interpret=None,
+                     stage_blocks=1):
     if interpret is None:
         interpret = _default_interpret()
     return _ds.duplex_kv_stream(in_q, in_scale, out_x, fused=fused,
-                                interpret=interpret)
+                                interpret=interpret,
+                                stage_blocks=stage_blocks)
 
 
 def dequant_kv_stream(in_q, in_scale, *, interpret=None):

@@ -47,6 +47,11 @@ def main() -> int:
                    help="KV pool HBM slots shared by the whole batch")
     p.add_argument("--pool-blocks", type=int, default=0)
     p.add_argument("--prefill-chunk", type=int, default=4)
+    p.add_argument("--megastep", type=int, default=8,
+                   help="engine steps fused per host dispatch (K): the "
+                        "run loop adapts K between admission events and "
+                        "syncs the host once per megastep. 1 = classic "
+                        "per-step loop")
     p.add_argument("--policy", default="hinted",
                    help="admission policy (core.policies registry)")
     p.add_argument("--tenants", default="",
@@ -79,7 +84,7 @@ def main() -> int:
         hbm_blocks=max(args.hbm_blocks, tenant_reserve + 4),
         pool_blocks=args.pool_blocks, prefill_chunk=args.prefill_chunk,
         max_queue=max(args.requests, args.batch) + 8, policy=args.policy,
-        paging=not args.no_paging)
+        paging=not args.no_paging, megastep=args.megastep)
     tenant_names = [t for t in args.tenants.split(",") if t]
     unknown = [t for t in tenant_names if t not in ("redis", "vectordb")]
     if unknown:
@@ -126,8 +131,10 @@ def main() -> int:
     total_tokens = sum(len(outs[r]) for r in rids)
 
     first = engine.completed[rids[0]]
+    est = engine.stats()
     print(f"served {args.requests} requests / {total_tokens} tokens in "
-          f"{engine.step_count} steps, {dt:.2f}s "
+          f"{engine.step_count} steps / {est['host_dispatches']} host "
+          f"dispatches (megastep={args.megastep}), {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s)")
     print(f"first request: admitted step {first.admitted_step}, done step "
           f"{first.done_step}, tokens {outs[rids[0]][:8].tolist()}...")
@@ -147,6 +154,8 @@ def main() -> int:
         "slots": args.batch,
         "generated_tokens": int(total_tokens),
         "steps": int(engine.step_count),
+        "megastep": args.megastep,
+        "host_dispatches": int(est["host_dispatches"]),
         "wall_s": round(dt, 3),
         "tok_s": round(total_tokens / dt, 2),
         "paging": _round(engine.paging_stats()),

@@ -18,6 +18,7 @@ New code should import from ``repro.serve`` directly.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax.numpy as jnp
 import numpy as np
@@ -52,6 +53,10 @@ class OffloadedKVCache:
 
     def __init__(self, n_blocks: int, hbm_blocks: int, block_shape,
                  hints: HintTree | None = None):
+        warnings.warn(
+            "repro.runtime.serve.OffloadedKVCache is deprecated; use "
+            "repro.serve.PagedKVPool (batched step()/write()/read()) "
+            "directly", DeprecationWarning, stacklevel=2)
         self.pool = PagedKVPool(n_blocks, hbm_blocks, block_shape,
                                 hints=hints)
         self.n_blocks = n_blocks
@@ -109,6 +114,10 @@ class DecodeServer:
     """Deprecated static-batch front end over ``serve.ServeEngine``."""
 
     def __init__(self, api: ModelAPI, params, cfg: ServeConfig):
+        warnings.warn(
+            "repro.runtime.serve.DecodeServer is deprecated; drive "
+            "repro.serve.ServeEngine (submit()/run()) directly",
+            DeprecationWarning, stacklevel=2)
         self.api = api
         self.params = params
         self.cfg = cfg

@@ -54,6 +54,32 @@ row's leaves from the pre-micro-step cache (a per-row masked select fused
 *inside* the jitted step; no whole-cache copies, no host sync). A
 prefill-only micro-step with no movers at all skips the model entirely
 via ``lax.cond``. Either way frozen rows never contaminate generation.
+
+Megasteps: ``cfg.megastep = K`` runs up to K consecutive engine steps as
+ONE jitted, buffer-donated program — an outer ``lax.scan`` over the fused
+step, per-slot device state threaded through the carry — with ONE packed
+``(B, 3+K)`` readback per megastep instead of one per step, so the host
+round-trip (and the dispatch tax it serializes) is paid once per K
+tokens. The key enabler is that everything about an engine step *except
+the token values* is deterministic host arithmetic: per-slot state
+transitions, consumed/generated counters, block-fill schedules and
+completion steps all follow from (prompt_len, max_new, prefill_chunk),
+so the host pre-plans all K steps' KV paging without waiting for the
+device (``_simulate_row``), and the readback is needed only to append
+the sampled tokens to the host mirrors (cross-checked against the
+prediction). Paging overlaps compute: the megastep program stages each
+inner step's freshly filled blocks as a scan output (cursor arithmetic
+is fixed-width, so extraction happens on device right after the step
+that filled them), and the per-step gather/stream-kernel/commit
+transactions are dispatched against those staging slabs while later
+inner steps' compute is still in flight — no host sync anywhere between
+two megastep boundaries. Admission, retirement, and policy
+``schedule``/``update`` move to megastep boundaries; the K steps'
+policy ``Feedback`` is folded in one scanned update
+(``core.policies.fold_feedback``). ``megastep=1`` is bit-identical to
+the classic per-step loop (``step()`` *is* ``megastep(1)``), and
+``run()`` picks the megastep width adaptively so admission still
+happens at exactly the steps the per-step loop would have used.
 """
 
 from __future__ import annotations
@@ -67,11 +93,25 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.core import policies as policies_lib
 from repro.core.hints import HintTree, default_serving_hints
 from repro.models.registry import ModelAPI
 from repro.serve.kv_pool import PagedKVPool
-from repro.serve.queue import (DECODE, DONE, PREFILL, Request, RequestQueue,
-                               S_DECODE, S_DONE, S_EMPTY, S_PREFILL)
+from repro.serve.queue import (DECODE, DONE, PREFILL, STATE_OF_CODE,
+                               Request, RequestQueue, S_DECODE, S_DONE,
+                               S_EMPTY, S_PREFILL)
+
+
+@dataclasses.dataclass(frozen=True)
+class _RowStep:
+    """One live row's predicted post-state for one inner step of a
+    megastep (host-deterministic; see ``ServeEngine._simulate_row``)."""
+    state: int          # S_* code after the step
+    consumed: int       # prompt tokens consumed after the step
+    n_gen: int          # tokens generated after the step
+    written: int        # tokens resident in the dense cache after it
+    emitted: bool       # did this step emit a sample?
+    transition: bool    # was it the PREFILL->DECODE transition step?
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +125,9 @@ class EngineConfig:
     max_queue: int = 32
     policy: str = "hinted"      # admission policy (core.policies registry)
     paging: bool = True         # False: pure continuous batching, no pool
+    megastep: int = 1           # engine steps fused per host dispatch (K);
+                                # run() adapts K <= megastep between
+                                # admission events. 1 = classic step loop.
 
     def resolved_pool_blocks(self) -> int:
         if self.pool_blocks:
@@ -146,16 +189,17 @@ def _admit_rows(dev, mask, prompts, prompt_len, max_new):
     }
 
 
-@functools.partial(jax.jit, static_argnames=("block_tokens",))
-def _extract_blocks_impl(k, v, slot_idx, t0, *, block_tokens: int):
+def _extract_blocks_math(k, v, slot_idx, t0, *, block_tokens: int):
     """Gather KV blocks from the dense cache, batched over (slot, t0).
 
-    k/v: (L, B, W, KV, hd). slot_idx/t0: (n,) int32 — the engine always
-    passes a fixed-width (hbm_capacity) vector padded with dummy entries,
-    so write-through never retraces on the number of freshly filled
-    blocks. Returns (n, block_tokens, kv_dims) bf16 slabs with
-    kv_dims = L * 2 * KV * hd — the block-table-indexed read the pool
-    pages."""
+    k/v: (L, B, W, KV, hd). slot_idx/t0: (n,) int32 — callers always pass
+    a fixed-width vector padded with dummy entries, so write-through
+    never retraces on the number of freshly filled blocks. Returns
+    (n, block_tokens, kv_dims) bf16 slabs with kv_dims = L * 2 * KV * hd
+    — the block-table-indexed read the pool pages. Plain traceable math:
+    the megastep program inlines it inside its scan (staging the filled
+    blocks right after the inner step that filled them); the jitted
+    ``_extract_blocks_impl`` wraps it for stand-alone use."""
     W = k.shape[2]
     idx = ((t0[:, None] + jnp.arange(block_tokens)[None, :]) % W
            ).astype(jnp.int32)
@@ -173,6 +217,12 @@ def _extract_blocks_impl(k, v, slot_idx, t0, *, block_tokens: int):
     return kv.reshape(n, block_tokens, -1).astype(jnp.bfloat16)
 
 
+@functools.partial(jax.jit, static_argnames=("block_tokens",))
+def _extract_blocks_impl(k, v, slot_idx, t0, *, block_tokens: int):
+    return _extract_blocks_math(k, v, slot_idx, t0,
+                                block_tokens=block_tokens)
+
+
 def _extract_blocks(cache, slot_idx, t0, block_tokens: int) -> jnp.ndarray:
     """Compat wrapper over ``_extract_blocks_impl`` accepting the cache
     dict and python index lists (tests use it; the engine calls the jitted
@@ -184,29 +234,58 @@ def _extract_blocks(cache, slot_idx, t0, block_tokens: int) -> jnp.ndarray:
         block_tokens=block_tokens)
 
 
-@functools.lru_cache(maxsize=32)
-def _fused_step_program(api: ModelAPI, n_micro: int):
-    """Build the engine-step program: one jitted, buffer-donated XLA
-    program running up to ``n_micro`` micro-steps as a ``lax.scan`` with
-    on-device argmax feedback.
+def _written_of(dev):
+    """Tokens whose KV is in the dense cache, per slot — the device twin
+    of ``ServeEngine._written`` (all consumed prompt tokens, plus every
+    generated token that has been fed back)."""
+    return jnp.where(dev["state"] == S_PREFILL, dev["consumed"],
+                     jnp.maximum(dev["consumed"] + dev["n_gen"] - 1, 0))
 
-    Cached per (ModelAPI, prefill_chunk): every engine sharing that cell
-    reuses the compiled program (warm restarts, A/B engines, the
-    benchmark's warmup engine). Donating ``cache`` and the slot-state
-    arrays means the step updates in place — HBM holds one cache.
 
-    Returns ``fn(params, cache, dev) -> (cache, dev, packed)`` where
-    ``packed`` is the (B, 4) int32 completion readback
-    (state | consumed | n_gen | newest token) — the step's single
-    device->host sync reads exactly this one small array. A row emits at
-    most one token per engine step (decode rows move only at micro-step
-    0; a prefill row emits once, on its transition), so the newest token
-    plus the n_gen counter is enough for the host mirror to append.
+@functools.lru_cache(maxsize=64)
+def _fused_megastep_program(api: ModelAPI, n_micro: int, n_steps: int,
+                            block_tokens: int | None):
+    """Build the megastep program: ``n_steps`` consecutive engine steps
+    as ONE jitted, buffer-donated XLA program — an outer ``lax.scan``
+    over the fused engine step (itself a ``lax.scan`` of up to
+    ``n_micro`` micro-steps with on-device argmax feedback), per-slot
+    device state threaded through the carry.
+
+    Cached per (ModelAPI, prefill_chunk, K, block_tokens): every engine
+    sharing that cell reuses the compiled program (warm restarts, A/B
+    engines, the benchmark's warmup engine); ``run()`` quantizes its
+    adaptive K to powers of two so a serving run populates a handful of
+    cells, not one per gap length. Donating ``cache`` and the slot-state
+    arrays means the megastep updates in place — HBM holds one cache.
+
+    Returns ``fn(params, cache, dev) -> (cache, dev, packed[, staged])``
+    where ``packed`` is the (B, 3+K) int32 completion readback
+    (state | consumed | n_gen | tok_0 .. tok_{K-1}) — the megastep's
+    single device->host sync reads exactly this one small array. A row
+    emits at most one token per engine step (decode rows move only at
+    micro-step 0; a prefill row emits once, on its transition), and
+    after an emitting micro-step the feed token *is* the emitted sample,
+    so the K per-step feed tokens plus the final counters are the
+    complete host-mirror delta (the host knows *which* steps emitted
+    deterministically).
+
+    With ``block_tokens`` set (a paged engine), the program also stages
+    KV write-through on device: right after inner step t it extracts the
+    blocks that step filled — fixed-width cursor arithmetic over the
+    pre-step write positions, ``max_fills`` candidate blocks per slot —
+    and stacks them into ``staged`` (K, B*max_fills, block_tokens,
+    kv_dims) bf16, the double-buffered staging stack the pool's
+    per-inner-step paging transactions consume while later inner steps'
+    compute is still in flight (padding rows are dropped by the pool's
+    sentinel-id scatter).
     """
     ring = api.cache_kind == "ring"
     n_micro = max(1, n_micro)
+    extract = block_tokens is not None
+    if extract:
+        max_fills = -(-n_micro // block_tokens)
 
-    def step(params, cache, dev):
+    def engine_step(params, cache, dev):
         B = dev["state"].shape[0]
         P = dev["prompt"].shape[1]
         brange = jnp.arange(B)
@@ -264,13 +343,40 @@ def _fused_step_program(api: ModelAPI, n_micro: int):
 
         (cache, dev), _ = lax.scan(micro, (cache, dev),
                                    jnp.arange(n_micro))
-        # after an emitting micro-step, ``tok`` is exactly the emitted
-        # sample (decode feedback), so it doubles as the newest token.
-        packed = jnp.stack([dev["state"], dev["consumed"],
-                            dev["n_gen"], dev["tok"]], axis=1)
+        return cache, dev
+
+    def mega(params, cache, dev):
+        def inner(carry, _):
+            cache, dev = carry
+            fill_base = _written_of(dev) // (block_tokens or 1)
+            cache, dev = engine_step(params, cache, dev)
+            # after an emitting micro-step, ``tok`` is exactly the
+            # emitted sample (decode feedback), so it doubles as the
+            # newest token for this inner step.
+            if not extract:
+                return (cache, dev), dev["tok"]
+            B = dev["state"].shape[0]
+            slot_idx = jnp.repeat(jnp.arange(B, dtype=jnp.int32),
+                                  max_fills)
+            t0 = (jnp.repeat(fill_base, max_fills)
+                  + jnp.tile(jnp.arange(max_fills, dtype=jnp.int32),
+                             B)) * block_tokens
+            staged = _extract_blocks_math(cache["k"], cache["v"],
+                                          slot_idx, t0,
+                                          block_tokens=block_tokens)
+            return (cache, dev), (dev["tok"], staged)
+
+        (cache, dev), ys = lax.scan(inner, (cache, dev), None,
+                                    length=n_steps)
+        toks = ys[0] if extract else ys          # (K, B)
+        packed = jnp.concatenate(
+            [dev["state"][:, None], dev["consumed"][:, None],
+             dev["n_gen"][:, None], jnp.swapaxes(toks, 0, 1)], axis=1)
+        if extract:
+            return cache, dev, packed, ys[1]
         return cache, dev, packed
 
-    return jax.jit(step, donate_argnums=(1, 2))
+    return jax.jit(mega, donate_argnums=(1, 2))
 
 
 class ServeEngine:
@@ -284,11 +390,12 @@ class ServeEngine:
                 "decode_step does not satisfy the fused step-loop "
                 "contract (pure, scan-safe, cache-donatable); the engine "
                 "cannot serve it")
+        if cfg.megastep < 1:
+            raise ValueError("megastep must be >= 1")
         self.api = api
         self.params = params
         self.cfg = cfg
         self.hints = hints or default_serving_hints()
-        self._step_fn = _fused_step_program(api, cfg.prefill_chunk)
         self.cache = api.init_cache(cfg.max_batch, cfg.cache_len)
         # pristine rows for slot recycling — a *separate* allocation: the
         # live cache's buffers are donated every step.
@@ -326,7 +433,14 @@ class ServeEngine:
         self.queue = RequestQueue(cfg.max_queue, policy=cfg.policy,
                                   hints=self.hints,
                                   kv_bytes_per_token=kv_bytes)
+        # the classic per-step program is the K=1 megastep cell; kept as
+        # ``_step_fn`` so the perf-contract (one compile per cell,
+        # engines share programs) is inspectable.
+        self._step_fn = self._mega_fn(1)
         self.step_count = 0
+        self.host_dispatches = 0   # fused step-program dispatches (the
+                                   # per-token host round-trip tax)
+        self.megasteps = 0         # megastep() invocations
         self.completed: dict[int, Request] = {}
         self._scan_cursor: dict[int, int] = {}   # rid -> cold-block cursor
         # non-LLM tenants (WorkloadAPI) sharing the pool, the paging
@@ -401,24 +515,162 @@ class ServeEngine:
                 + sum(t.pending() for t in self.tenants.values()))
 
     # -- the step loop -----------------------------------------------------
+    def _mega_fn(self, n_steps: int):
+        """The (ModelAPI, prefill_chunk, K, block_tokens) megastep cell
+        this engine uses for a K-step dispatch."""
+        bt = self.cfg.block_tokens if self.paged else None
+        return _fused_megastep_program(self.api, self.cfg.prefill_chunk,
+                                       n_steps, bt)
+
     def step(self) -> dict:
+        """One engine step — the K=1 megastep (bit-identical to the
+        classic admit / fused micro-steps / page / retire loop)."""
+        return self.megastep(1)
+
+    def megastep(self, n_steps: int | None = None) -> dict:
+        """Run up to K consecutive engine steps as one host dispatch.
+
+        One fused, donated program advances every slot K steps; the K
+        per-step paging transactions are planned from the host's
+        deterministic per-slot trajectories (``_simulate_row``) and
+        dispatched against the program's staged write-through slabs, so
+        nothing between two megastep boundaries blocks on the device.
+        The single device->host sync is the packed (B, 3+K) completion
+        readback at the end. Admission, LLM retirement, and the policy
+        fold all happen at the boundary.
+        """
+        k = int(n_steps) if n_steps else max(1, self.cfg.megastep)
         now = self.step_count
         admitted = self._admit(now)
-        advanced = self._advance_tokens()
-        paged = self._page_kv(now) if self.paged else {"page_ins": 0,
-                                                       "page_outs": 0}
-        completed = self._retire(now)
-        self.step_count += 1
-        return {"step": now, "admitted": admitted, "advanced": advanced,
-                "completed": completed, **paged}
+        live = self.active()
+        packed = staged = None
+        traj: dict[int, list[_RowStep]] = {}
+        if live:
+            traj = {r.rid: self._simulate_row(r, k) for r in live}
+            out = self._mega_fn(k)(self.params, self.cache, self._dev)
+            if self.paged:
+                self.cache, self._dev, packed, staged = out
+            else:
+                self.cache, self._dev, packed = out
+            self.host_dispatches += 1
+
+        report = {"page_ins": 0, "page_outs": 0}
+        feedbacks = []
+        tenant_done = 0
+        for t in range(k):
+            rows = []
+            for r in live:
+                st = traj[r.rid][t]
+                if st.state != S_DONE:
+                    rows.append((r, st))
+            if self.paged:
+                rep = self._page_kv_at(now + t, rows, staged, t)
+                report["page_ins"] += rep["page_ins"]
+                report["page_outs"] += rep["page_outs"]
+                # rows completing at this inner step release their pool
+                # blocks NOW (deterministic), exactly when the per-step
+                # loop would have — holding them to the boundary would
+                # force spurious evictions on later inner steps.
+                for r in live:
+                    st = traj[r.rid][t]
+                    if (st.state == S_DONE and r.blocks
+                            and not r.blocks_freed
+                            and (t == 0
+                                 or traj[r.rid][t - 1].state != S_DONE)):
+                        self.pool.free(r.blocks)
+                        r.blocks_freed = True
+            for tn in self.tenants.values():
+                for r in tn.retire(now + t):
+                    self.completed[r.rid] = r
+                    tenant_done += 1
+            if k > 1:
+                feedbacks.append(policies_lib.Feedback(
+                    moved_read=np.zeros((self.queue.capacity,),
+                                        np.float32),
+                    moved_write=np.zeros((self.queue.capacity,),
+                                         np.float32),
+                    utilization=np.float32(
+                        len(rows) / max(1, self.cfg.max_batch))))
+
+        advanced = 0
+        if live:
+            rb = self._readback(packed)
+            for r in live:
+                steps_r = traj[r.rid]
+                toks = [int(rb[r.slot, 3 + t])
+                        for t, st in enumerate(steps_r) if st.emitted]
+                c0, g0 = r.consumed, len(r.generated)
+                r.sync_megastep(int(rb[r.slot, 0]), int(rb[r.slot, 1]),
+                                int(rb[r.slot, 2]), toks)
+                last = steps_r[-1]
+                if (STATE_OF_CODE[last.state] != r.state
+                        or last.consumed != r.consumed):
+                    raise RuntimeError(
+                        f"rid {r.rid}: device state "
+                        f"({r.state}, consumed={r.consumed}) diverged "
+                        f"from the host trajectory "
+                        f"({STATE_OF_CODE[last.state]}, "
+                        f"consumed={last.consumed})")
+                advanced += ((last.consumed + last.n_gen) - (c0 + g0)
+                             - sum(st.transition for st in steps_r))
+                if r.state == DONE:
+                    r.done_step = now + next(
+                        t for t, st in enumerate(steps_r)
+                        if st.state == S_DONE)
+        completed = tenant_done + self._retire(now + k - 1)
+        if feedbacks and len(self.queue):
+            # megastep-boundary policy feedback: K per-step Feedbacks
+            # folded through Policy.update as one scanned program, and
+            # the megastep's mean slot utilization surfaced to the next
+            # schedule() as Obs.prev_util (host float — no device sync;
+            # this is what the oversubscription detector reads). The
+            # engine has no per-waiting-slot service to report, so for
+            # the registered policies the fold itself is state-invariant
+            # (zero moved bytes) — it is the boundary *contract*: a
+            # policy whose update reads utilization or cross-step
+            # structure gets the full per-step sequence, not a lossy
+            # sum. One small dispatch per boundary buys that. Only
+            # worth dispatching while requests wait — with an empty
+            # waiting room there is no admission ranking to influence.
+            # Padded up to the configured megastep width so the fold
+            # compiles once per engine config, not once per adaptive
+            # gap length (a zero-service step is an update no-op for
+            # every registered policy); an explicit megastep() call
+            # wider than the config gets its own cell.
+            util = float(np.mean([float(fb.utilization)
+                                  for fb in feedbacks]))
+            zero = policies_lib.Feedback(
+                moved_read=np.zeros((self.queue.capacity,), np.float32),
+                moved_write=np.zeros((self.queue.capacity,), np.float32),
+                utilization=np.float32(0.0))
+            pad = max(0, max(1, self.cfg.megastep) - len(feedbacks))
+            self.queue.note_service(
+                policies_lib.stack_feedbacks(feedbacks + [zero] * pad),
+                mean_util=util)
+        self.step_count += k
+        self.megasteps += 1
+        return {"step": now, "steps": k, "admitted": admitted,
+                "advanced": advanced, "completed": completed, **report}
 
     def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
-        """Drive steps until every submitted request completes."""
+        """Drive megasteps until every submitted request completes.
+
+        Between admission events the engine free-runs: ``_auto_megastep``
+        picks the widest K <= ``cfg.megastep`` that cannot skip a step
+        where admission could change the live set (an arrival, a slot
+        freed by a completion, a write-through headroom change — all
+        host-deterministic), so admission happens at exactly the steps
+        the K=1 loop would have used while the host dispatches once per
+        gap. ``stats()`` reports ``host_dispatches`` next to ``steps`` —
+        the dispatch-tax ratio this loop exists to shrink."""
         limit = max_steps if max_steps is not None else 10_000
-        for _ in range(limit):
+        done_steps = 0
+        while done_steps < limit:
             if not self.pending():
                 break
-            self.step()
+            k = self._auto_megastep(limit - done_steps)
+            self.megastep(k)
+            done_steps += k
         if self.pending():
             stuck = sorted(
                 [r.rid for r in self.queue.waiting()]
@@ -430,6 +682,100 @@ class ServeEngine:
                 f"rids {stuck}")
         return {rid: np.asarray(r.generated, np.int32)
                 for rid, r in sorted(self.completed.items())}
+
+    # -- megastep planning (host-deterministic trajectories) ----------------
+    def _simulate_row(self, r: Request, k: int) -> "list[_RowStep]":
+        """Predict one live row's next ``k`` engine steps.
+
+        Everything but the sampled token values is fixed-width counter
+        arithmetic — the exact twin of the fused program's state machine:
+        a PREFILL row consumes up to ``prefill_chunk`` prompt tokens per
+        step and emits once on its transition micro-step; a DECODE row
+        emits exactly one token per step; DONE rows freeze. The megastep
+        path plans all K paging transactions from this and uses the
+        readback only for token values (divergence raises)."""
+        n_micro = max(1, self.cfg.prefill_chunk)
+        state = {PREFILL: S_PREFILL, DECODE: S_DECODE,
+                 DONE: S_DONE}[r.state]
+        consumed, n_gen = r.consumed, len(r.generated)
+        plen, mnew = r.prompt_len, r.max_new_tokens
+        out = []
+        for _ in range(k):
+            emitted = transition = False
+            if state == S_DECODE:
+                n_gen += 1
+                emitted = True
+                if n_gen >= mnew:
+                    state = S_DONE
+            elif state == S_PREFILL:
+                consumed = min(plen, consumed + n_micro)
+                if consumed >= plen:
+                    n_gen += 1
+                    emitted = transition = True
+                    state = S_DONE if n_gen >= mnew else S_DECODE
+            written = (consumed if state == S_PREFILL
+                       else max(consumed + n_gen - 1, 0))
+            out.append(_RowStep(state=state, consumed=consumed,
+                                n_gen=n_gen, written=written,
+                                emitted=emitted, transition=transition))
+        return out
+
+    def _steps_until_done(self, r: Request) -> int:
+        """Engine steps until this live row completes (deterministic)."""
+        if r.state == DONE:
+            return 0
+        n = 0
+        if r.state == PREFILL:
+            n = self._steps_until_decode(r)
+            gen_left = r.max_new_tokens - len(r.generated) - 1
+        else:
+            gen_left = r.max_new_tokens - len(r.generated)
+        return max(1, n + gen_left)
+
+    def _steps_until_decode(self, r: Request) -> int:
+        """Steps until a prefilling row's PREFILL->DECODE transition."""
+        if r.state != PREFILL:
+            return 0
+        n_micro = max(1, self.cfg.prefill_chunk)
+        return max(1, -(-(r.prompt_len - r.consumed) // n_micro))
+
+    def _auto_megastep(self, remaining: int) -> int:
+        """Widest safe megastep from the current boundary: never skip a
+        step where admission could change the live set. Event horizon =
+        future arrivals, plus (while admissible work waits) the earliest
+        deterministic completion or prefill->decode transition (slot and
+        write-through headroom changes). Quantized down to a power of
+        two so the adaptive loop populates O(log K) program cells."""
+        cap = min(max(1, self.cfg.megastep), max(1, remaining))
+        if cap == 1:
+            return 1
+        now = self.step_count
+        live = self.active()
+        waiting = self.queue.waiting()
+        events = [r.arrival_step - now for r in waiting
+                  if r.arrival_step > now]
+        if any(r.arrival_step <= now for r in waiting):
+            evs = []
+            for r in live:
+                evs.append(self._steps_until_done(r))
+                if r.state == PREFILL:
+                    evs.append(self._steps_until_decode(r))
+            for tn in self.tenants.values():
+                for tr in tn.running():
+                    ci = tn.completion_in(tr)
+                    evs.append(1 if ci is None else max(1, ci))
+            events.append(min(evs) if evs else 1)
+        if events:
+            k = min(cap, max(1, min(events)))
+        else:
+            # nothing can be admitted before the live set drains: free-run
+            # to the end of the longest remaining work (or the cap).
+            rem = [self._steps_until_done(r) for r in live]
+            for tn in self.tenants.values():
+                rem.extend(max(1, tn.completion_in(tr) or 1)
+                           for tr in tn.running())
+            k = min(cap, max(rem)) if rem else 1
+        return 1 << (k.bit_length() - 1)
 
     # -- phase 1: admission -------------------------------------------------
     def _worst_step_blocks(self, prompt_len: int, max_new: int,
@@ -523,61 +869,46 @@ class ServeEngine:
         return r.consumed + len(r.generated) - 1
 
     def _readback(self, packed) -> np.ndarray:
-        """The step's single device->host sync: one packed (B, 4) int32
-        array of per-slot (state | consumed | n_gen | newest token)."""
+        """The megastep's single device->host sync: one packed (B, 3+K)
+        int32 array of per-slot (state | consumed | n_gen | K newest
+        tokens)."""
         return np.asarray(packed)
 
-    def _advance_tokens(self) -> int:
-        live = self.active()
-        if not live:
-            return 0
-        before = {r.rid: (r.consumed + len(r.generated),
-                          r.state == PREFILL) for r in live}
-        self.cache, self._dev, packed = self._step_fn(
-            self.params, self.cache, self._dev)
-        rb = self._readback(packed)
-        advanced = 0
-        for r in live:
-            row = rb[r.slot]
-            r.sync_from_device(int(row[0]), int(row[1]), int(row[2]),
-                               int(row[3]))
-            prev_total, was_prefill = before[r.rid]
-            advanced += (r.consumed + len(r.generated)) - prev_total
-            if was_prefill and r.state != PREFILL:
-                # the prefill->decode transition micro-step both consumes
-                # the last prompt token and emits the first sample — one
-                # micro-step, not two.
-                advanced -= 1
-        return advanced
-
-    # -- phase 3: batched KV paging (all tenants, one transaction) ----------
-    def _page_kv(self, now: int = 0) -> dict:
-        """One paging transaction for the whole step: LLM KV traffic plus
+    # -- batched KV paging (all tenants, one transaction per inner step) ----
+    def _page_kv_at(self, now: int, rows: "list[tuple[Request, _RowStep]]",
+                    staged, t: int) -> dict:
+        """One paging transaction for inner step ``t`` of a megastep:
+        LLM KV traffic (planned from the host-deterministic trajectory,
+        written through from the megastep program's staged slab) plus
         every tenant's block demand, grouped by hint scope, through a
-        single ``PagedKVPool.step_multi`` call; then the LLM write-through
-        and each tenant's device compute against the resident blocks."""
+        single ``PagedKVPool.step_multi`` call; then each tenant's device
+        compute against the resident blocks. Dispatch-only — nothing here
+        waits on the device."""
         bt = self.cfg.block_tokens
-        live = [r for r in self.active() if r.state != DONE]
-        new_pairs: list[tuple[Request, int]] = []   # (req, block_index)
-        for r in live:
-            n_filled = self._written(r) // bt
+        new_pairs: list[tuple[Request, int, int]] = []  # (req, bi, stage_j)
+        for r, st in rows:
+            # invariant: entering inner step t, len(r.blocks) is the
+            # block count before the step — the device staged this step's
+            # fills at stage rows j = bi - fill_base.
+            fill_base = len(r.blocks)
+            n_filled = st.written // bt
             while len(r.blocks) < n_filled:
                 bi = len(r.blocks)
                 r.blocks.extend(self.pool.alloc(1))
-                new_pairs.append((r, bi))
+                new_pairs.append((r, bi, bi - fill_base))
 
         # tenant demand first: it is bounded by the per-tenant
         # reservations, and the LLM cold-scan budget shrinks to whatever
         # the tenants actually left unclaimed this step.
         tenant_groups: list[tuple[str, list[int]]] = []
         tenant_blocks = 0
-        for t in self.tenants.values():
-            for path, ids in t.block_demand(now):
+        for tn in self.tenants.values():
+            for path, ids in tn.block_demand(now):
                 if ids:
                     tenant_groups.append((path, ids))
                     tenant_blocks += len(set(ids))
 
-        new_ids = [r.blocks[bi] for r, bi in new_pairs]
+        new_ids = [r.blocks[bi] for r, bi, _ in new_pairs]
         budget = self.pool.hbm_capacity - tenant_blocks
         if len(new_ids) > budget:
             raise RuntimeError(
@@ -586,10 +917,11 @@ class ServeEngine:
                 f"by tenants); shrink prefill_chunk or grow hbm_blocks")
         # new blocks first — they must be resident for the write-through;
         # demand beyond capacity is advisory and may be trimmed.
-        demand = self._block_demand(live)
+        holders = [r for r, _ in rows]
+        demand = self._block_demand(holders)
         needed = list(dict.fromkeys(new_ids + [b for _, b, _ in demand]))
         needed = needed[:budget]
-        self._advance_cursors(demand, set(needed))
+        self._advance_cursors(holders, demand, set(needed))
         groups = ([("/serve/kv_cache", needed)] if needed else []) \
             + tenant_groups
         if not groups and not self.tenants:
@@ -598,23 +930,20 @@ class ServeEngine:
                   else {"page_ins": 0, "page_outs": 0})
 
         if new_pairs:
-            # fixed-width (hbm_capacity) extraction + write: padding rows
+            # fixed-width write-through from the megastep staging stack:
+            # stage row slot*max_fills + j holds the block the fused
+            # program extracted right after this inner step; padding rows
             # carry an out-of-range sentinel id the pool's scatter drops,
-            # so neither program retraces on the per-step block count.
-            W = self.pool.hbm_capacity
-            slot_idx = np.zeros((W,), np.int32)
-            t0 = np.zeros((W,), np.int32)
-            ids = np.full((W,), self.pool.n_blocks, np.int32)
-            for j, (r, bi) in enumerate(new_pairs):
-                slot_idx[j] = r.slot
-                t0[j] = bi * bt
-                ids[j] = r.blocks[bi]
-            data = _extract_blocks_impl(
-                self.cache["k"], self.cache["v"], jnp.asarray(slot_idx),
-                jnp.asarray(t0), block_tokens=bt)
-            self.pool.write(ids, data)
-        for t in self.tenants.values():
-            t.compute(self.pool, now)
+            # so the program never retraces on the per-step block count.
+            n_micro = max(1, self.cfg.prefill_chunk)
+            max_fills = -(-n_micro // bt)
+            ids = np.full((self.cfg.max_batch * max_fills,),
+                          self.pool.n_blocks, np.int32)
+            for r, bi, j in new_pairs:
+                ids[r.slot * max_fills + j] = r.blocks[bi]
+            self.pool.write_staged(ids, staged, t)
+        for tn in self.tenants.values():
+            tn.compute(self.pool, now)
         return report
 
     def _block_demand(self, live: list[Request]
@@ -640,7 +969,8 @@ class ServeEngine:
                 demand.extend((r.rid, b, True) for b in ring[:k])
         return demand
 
-    def _advance_cursors(self, demand: list[tuple[int, int, bool]],
+    def _advance_cursors(self, holders: list[Request],
+                         demand: list[tuple[int, int, bool]],
                          kept: set[int]) -> None:
         """Move each request's cold-scan cursor past the cold picks that
         survived the capacity trim — trimmed blocks were never paged, so
@@ -649,36 +979,48 @@ class ServeEngine:
         for rid, block, cold in demand:
             if cold and block in kept:
                 stepped[rid] = stepped.get(rid, 0) + 1
-        for r in self.active():
+        for r in holders:
             k = stepped.get(r.rid)
             if k and len(r.blocks) > 1:
                 n = len(r.blocks) - 1
                 c = self._scan_cursor.get(r.rid, 0) % n
                 self._scan_cursor[r.rid] = (c + k) % n
 
-    # -- phase 4: completion -------------------------------------------------
+    # -- completion (LLM rows; tenants retire per inner step) ----------------
     def _retire(self, now: int) -> int:
         n = 0
         for i, r in enumerate(self.slots):
             if r is not None and r.state == DONE:
-                r.done_step = now
-                if self.paged and r.blocks:
+                if r.done_step < 0:
+                    r.done_step = now
+                if self.paged and r.blocks and not r.blocks_freed:
                     self.pool.free(r.blocks)
+                    r.blocks_freed = True
                 self._scan_cursor.pop(r.rid, None)
                 self.slots[i] = None
-                self.completed[r.rid] = r
-                n += 1
-        for t in self.tenants.values():
-            for r in t.retire(now):
                 self.completed[r.rid] = r
                 n += 1
         return n
 
     # -- reporting -----------------------------------------------------------
+    def stats(self) -> dict:
+        """Dispatch accounting: ``steps`` (engine steps run),
+        ``host_dispatches`` (fused step-program launches — the per-token
+        host round-trip tax megasteps amortize) and ``megasteps``
+        (boundary count). steps / host_dispatches is the realized
+        megastep width."""
+        return {"steps": self.step_count,
+                "host_dispatches": self.host_dispatches,
+                "megasteps": self.megasteps}
+
     def paging_stats(self) -> dict:
         if not self.paged:
-            return {"paged": False}
+            return {"paged": False, **self.stats()}
+        # pool stats carry their own "steps" (paging transactions); the
+        # engine's dispatch accounting wins the shared key, the pool's
+        # count survives as "paging_steps".
         stats = {"paged": True, **self.pool.stats,
+                 "paging_steps": self.pool.stats["steps"], **self.stats(),
                  "duplex_speedup": self.pool.duplex_speedup()}
         stats["by_path"] = {
             path: {**st, "duplex_speedup": self.pool.duplex_speedup(path)}

@@ -59,11 +59,20 @@ def _fresh_path_stats() -> dict:
 # so the handful of combos a serving run produces each compile once.
 # ---------------------------------------------------------------------------
 
+#: staging-buffer depth for the fused duplex kernel: each pipelined grid
+#: step DMAs a slab of this many pages per direction while the previous
+#: slab transforms (the kernel's double-buffer granularity; streams are
+#: zero-padded up to a multiple and the padding is dropped at commit).
+STAGE_BLOCKS = 2
+
+
 @jax.jit
 def _gather_duplex(host_q, host_scale, hbm, stale_ids, out_slot_ids):
     """Both directions busy: gather + pad both streams to a uniform grid
-    for the fused kernel in one program."""
+    (a multiple of the staging depth) for the fused kernel in one
+    program."""
     m = max(stale_ids.shape[0], out_slot_ids.shape[0])
+    m += -m % STAGE_BLOCKS
 
     def pad(a):
         if a.shape[0] == m:
@@ -103,6 +112,17 @@ def _commit_paging(hbm, host_q, host_scale, in_deq, out_q, out_scale,
 def _write_blocks(hbm, dst, data):
     """Fixed-width write-through scatter; out-of-range dst rows (padding
     sentinels) are dropped."""
+    return hbm.at[dst].set(data.astype(jnp.bfloat16), mode="drop")
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_blocks_at(hbm, dst, staged, t):
+    """Megastep write-through: scatter inner step ``t``'s slab out of the
+    (K, W, tokens, kv_dims) staging stack the fused megastep program
+    emitted. ``t`` is a device scalar — one compiled program per staged
+    shape, not per step index — and the slab is sliced on device, so the
+    staging stack never round-trips the host."""
+    data = jax.lax.dynamic_index_in_dim(staged, t, axis=0, keepdims=False)
     return hbm.at[dst].set(data.astype(jnp.bfloat16), mode="drop")
 
 
@@ -363,7 +383,7 @@ class PagedKVPool:
                     self.host_q, self.host_scale, self.hbm,
                     jnp.asarray(stale), jnp.asarray(out_slots))
                 in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
-                    in_q, in_scale, out_x)
+                    in_q, in_scale, out_x, stage_blocks=STAGE_BLOCKS)
                 self.stats["kernel_calls"] += 1
                 bp["fused_calls"] += 1
             else:
@@ -413,21 +433,46 @@ class PagedKVPool:
         rows are dropped by the scatter, so callers can keep a static
         update shape across steps (no retrace per block count).
         """
+        dst, real = self._write_dst(blocks)
+        if dst is None:
+            return
+        self.hbm = _write_blocks(self.hbm, jnp.asarray(dst), data)
+        self._dirty[real] = True
+        self._touch(real)
+
+    def write_staged(self, blocks, staged: jnp.ndarray, step: int) -> None:
+        """Write-through one megastep inner step's freshly filled blocks
+        straight from the (K, W, tokens, kv_dims) staging stack the
+        fused megastep program emitted (see ``serve.engine``). The slab
+        for ``step`` is selected on device — the staging stack is the
+        double buffer between the megastep's compute scan and the K
+        paging transactions, and it never touches the host. Ids follow
+        ``write``'s sentinel-padding contract (out-of-range rows drop).
+        """
+        dst, real = self._write_dst(blocks)
+        if dst is None:
+            return
+        self.hbm = _write_blocks_at(self.hbm, jnp.asarray(dst), staged,
+                                    np.int32(step))
+        self._dirty[real] = True
+        self._touch(real)
+
+    def _write_dst(self, blocks) -> tuple[np.ndarray | None, np.ndarray]:
+        """Shared write-through validation: map logical ids to HBM slot
+        destinations, sentinel-padding invalid rows."""
         blocks = np.asarray(blocks, np.int32)
         if blocks.size == 0:
-            return
+            return None, blocks
         valid = (blocks >= 0) & (blocks < self.n_blocks)
         real = blocks[valid]
         if real.size == 0:
-            return
+            return None, real
         slots = self.slot_of[real]
         if (slots < 0).any():
             raise ValueError("write to non-resident block; call step() first")
         dst = np.full(blocks.shape, self.hbm_capacity, np.int32)  # OOB pad
         dst[valid] = slots
-        self.hbm = _write_blocks(self.hbm, jnp.asarray(dst), data)
-        self._dirty[real] = True
-        self._touch(real)
+        return dst, real
 
     def read(self, blocks) -> jnp.ndarray:
         """Gather resident blocks: (n, tokens, kv_dims) bf16."""

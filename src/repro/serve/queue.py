@@ -77,6 +77,8 @@ class Request:
     consumed: int = 0                   # prompt tokens fed so far
     generated: list = dataclasses.field(default_factory=list)
     blocks: list = dataclasses.field(default_factory=list)  # pool block ids
+    blocks_freed: bool = False          # pool blocks already released
+                                        # (mid-megastep retirement)
     slot: int = -1                      # engine batch slot while running
     admitted_step: int = -1
     done_step: int = -1
@@ -114,6 +116,24 @@ class Request:
                 f"but the host mirror holds {len(self.generated)} — "
                 f"mirrors out of sync")
 
+    def sync_megastep(self, code: int, consumed: int, n_gen: int,
+                      tokens) -> None:
+        """Refresh this host mirror from a megastep's packed readback.
+
+        ``tokens`` — the emitted samples of the K inner steps this row
+        emitted on, in step order (the host knows *which* steps emitted
+        deterministically; the readback supplies only the values). The
+        device's final (state | consumed | n_gen) cross-checks the host's
+        step-count arithmetic — a mismatch means the two diverged."""
+        self.state = STATE_OF_CODE[int(code)]
+        self.consumed = int(consumed)
+        self.generated.extend(int(t) for t in tokens)
+        if int(n_gen) != len(self.generated):
+            raise RuntimeError(
+                f"rid {self.rid}: device reports {int(n_gen)} generated "
+                f"tokens after the megastep but the host trajectory "
+                f"yields {len(self.generated)} — mirrors out of sync")
+
 
 @functools.lru_cache(maxsize=32)
 def _policy_programs(policy: policies_lib.Policy,
@@ -125,6 +145,11 @@ def _policy_programs(policy: policies_lib.Policy,
     every queue sharing the cell reuses the compiled programs."""
     schedule = jax.jit(functools.partial(policy.schedule, params))
     update = jax.jit(functools.partial(policy.update, params))
+    # megastep service: fold a whole stacked Feedback (leading K axis)
+    # through update as ONE scanned program — compiled per (cell, K), so
+    # the handful of megastep widths a run uses each trace once.
+    fold = jax.jit(functools.partial(policies_lib.fold_feedback, policy,
+                                     params))
 
     def reset(state, mask):
         # reinitialize per-slot policy state for masked waiting slots
@@ -138,7 +163,7 @@ def _policy_programs(policy: policies_lib.Policy,
 
         return jax.tree.map(sel, state, fresh)
 
-    return schedule, update, jax.jit(reset)
+    return schedule, update, fold, jax.jit(reset)
 
 
 class RequestQueue:
@@ -158,8 +183,11 @@ class RequestQueue:
         self.kv_bytes = float(kv_bytes_per_token)
         self._slots: list[Request | None] = [None] * capacity
         self._state = self.policy.init(self.params, capacity)
-        self._schedule_fn, self._update_fn, self._reset_fn = \
-            _policy_programs(self.policy, self.params, capacity)
+        self._prev_util = 0.0   # last megastep's mean engine-slot
+                                # utilization (note_service)
+        self._schedule_fn, self._update_fn, self._fold_fn, \
+            self._reset_fn = _policy_programs(self.policy, self.params,
+                                              capacity)
         opt = channel_lib.duplex_benefit(link)
         self._opt_r = jnp.float32(opt["peak_read_fraction"])
         self._duplex = jnp.asarray(link.duplex)
@@ -187,6 +215,25 @@ class RequestQueue:
 
     def __len__(self) -> int:
         return len(self.waiting())
+
+    # -- megastep service feedback -----------------------------------------
+    def note_service(self, fb: policies_lib.Feedback,
+                     mean_util: float | None = None) -> None:
+        """Fold a megastep's worth of service feedback into the policy.
+
+        The engine aggregates per-engine-step ``Feedback`` over a whole
+        megastep (``policies.stack_feedbacks``) and hands it over once at
+        the megastep boundary; the policy's state update is the ordered
+        per-step fold (``policies.fold_feedback``), executed as one
+        scanned program — K steps of vruntime/window bookkeeping, one
+        dispatch, and bit-identical to K eager ``update`` calls.
+        ``mean_util`` (host float — never a device sync) is surfaced to
+        the next ``schedule`` call as ``Obs.prev_util``, so the
+        timeseries/hinted oversubscription detector finally sees real
+        engine-slot utilization instead of a constant 0."""
+        self._state = self._fold_fn(self._state, fb)
+        if mean_util is not None:
+            self._prev_util = float(mean_util)
 
     # -- policy-driven admission -------------------------------------------
     def _observe(self, now: int) -> tuple[policies_lib.Obs, np.ndarray]:
@@ -231,7 +278,7 @@ class RequestQueue:
             head_read=jnp.asarray(head_r),
             head_write=jnp.asarray(head_w),
             prev_weights=jnp.zeros((S,), jnp.float32),
-            prev_util=jnp.float32(0.0),
+            prev_util=jnp.float32(self._prev_util),
             opt_r=self._opt_r,
             duplex=self._duplex,
             hint_rf=jnp.asarray(hint_rf),

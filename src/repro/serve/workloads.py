@@ -24,7 +24,11 @@ Tenant contract (each engine step, in order):
      device-resident state. Tenants perform **zero** device->host syncs
      per step — completion accounting is host-deterministic, and results
      sync once at the end of a run (``result()``). The LLM readback stays
-     the step's only host sync;
+     the step's only host sync. This is also what lets the engine run
+     tenants through K-step *megasteps*: all K ``block_demand``/
+     ``compute`` rounds are dispatch-only, and ``completion_in`` (a
+     never-late steps-to-finish bound) tells the adaptive megastep where
+     the next admission-relevant tenant event can land;
   4. ``retire`` — finished tenant requests leave their slots.
 
 Ops are block-granular (a GET/SET moves one pool block — a batched
@@ -170,6 +174,13 @@ class WorkloadAPI:
     def _finished(self, req: Request) -> bool:
         raise NotImplementedError
 
+    def completion_in(self, req: Request) -> int | None:
+        """Engine steps until this running request finishes, if the
+        tenant can predict it (tenant service is host-deterministic, so
+        most can). ``None`` = unknown; the engine's adaptive megastep
+        then stops at every step while this tenant's work is waiting."""
+        return None
+
     def block_demand(self, now: int) -> list[tuple[str, list[int]]]:
         """Blocks this step's ops touch, as (hint_path, ids) groups."""
         raise NotImplementedError
@@ -202,6 +213,10 @@ class _KVWork:
     step_reads: list = dataclasses.field(default_factory=list)
     step_writes: list = dataclasses.field(default_factory=list)
     ops_done: int = 0
+    ops_target: int = -1                 # finish after serving this many
+                                         # ops (-1: run the schedule out)
+    bk_get: int = 0                      # queued, not-yet-served ops
+    bk_set: int = 0                      # (service-driven mode only)
 
 
 class KVStoreTenant(WorkloadAPI):
@@ -252,7 +267,8 @@ class KVStoreTenant(WorkloadAPI):
     # -- intake ------------------------------------------------------------
     def submit(self, pattern: str, n_steps: int, arrival_step: int = 0,
                hint_path: str | None = None,
-               phase: str | None = None) -> Request:
+               phase: str | None = None,
+               n_ops: int | None = None) -> Request:
         """Queue one op stream of a Fig. 5 pattern.
 
         The per-step (gets, sets) schedule is derived from the pattern's
@@ -263,6 +279,19 @@ class KVStoreTenant(WorkloadAPI):
         ``phase="read"``/``"write"``) and are tagged with the
         ``/serve/redis/seq/{read,write}`` leaning scopes so a
         duplex-aware admission policy can pair opposite phases.
+
+        ``n_ops`` makes completion *service-driven*: the request finishes
+        once that many ops were actually served (``n_steps`` is then the
+        schedule horizon / safety bound), and its ops queue behind a
+        per-step duplex service budget — up to half the tenant's op rate
+        per link direction, so balanced GET/SET traffic drains at full
+        rate while unidirectional backlog is capped at one direction's
+        share (the paper's turnaround penalty, at op granularity).
+        Latency in engine steps then reflects how fast the pattern's
+        direction mix — and the admission pairing the policy chose —
+        really drains, instead of a fixed schedule length. Without
+        ``n_ops`` the request runs the whole ``n_steps`` schedule with
+        unthrottled service (the legacy open-loop mode).
         """
         engine = self._require_bound()
         idx = self._n_submitted
@@ -289,23 +318,24 @@ class KVStoreTenant(WorkloadAPI):
             hint_path = f"{self.hint_root}/{pattern}"
         tot = arr.sum(axis=1)
         scale = max(float(tot.max()), 1e-9)
-        n_ops = np.ceil(self.ops_per_step * tot / scale).astype(np.int32)
+        per_step = np.ceil(self.ops_per_step * tot / scale).astype(np.int32)
         with np.errstate(invalid="ignore"):
             frac_r = np.where(tot > 0, arr[:, 0] / np.maximum(tot, 1e-9),
                               0.0)
         # error-diffused rounding: skewed mixes (read-heavy 10:1) keep
         # their minority direction instead of rounding it away entirely.
-        gets = np.zeros_like(n_ops)
+        gets = np.zeros_like(per_step)
         err = 0.0
-        for t in range(len(n_ops)):
-            x = float(n_ops[t]) * float(frac_r[t]) + err
-            g = int(np.clip(np.round(x), 0, n_ops[t]))
+        for t in range(len(per_step)):
+            x = float(per_step[t]) * float(frac_r[t]) + err
+            g = int(np.clip(np.round(x), 0, per_step[t]))
             err = x - g
             gets[t] = g
-        sets = n_ops - gets
+        sets = per_step - gets
         work = _KVWork(pattern=pattern,
                        schedule=np.stack([gets, sets], axis=1),
-                       rng=np.random.default_rng(self._seed + 7 * idx))
+                       rng=np.random.default_rng(self._seed + 7 * idx),
+                       ops_target=-1 if n_ops is None else int(n_ops))
         profile = TrafficProfile(
             backlog_read=float(arr[:, 0].sum()),
             backlog_write=float(arr[:, 1].sum()),
@@ -345,7 +375,75 @@ class KVStoreTenant(WorkloadAPI):
 
     # -- phases ------------------------------------------------------------
     def _finished(self, req: Request) -> bool:
-        return req.work.cursor >= len(req.work.schedule)
+        w = req.work
+        if w.ops_target >= 0 and w.ops_done >= w.ops_target:
+            return True
+        return w.cursor >= len(w.schedule)
+
+    def completion_in(self, req: Request) -> int | None:
+        """Steps until the op stream finishes. Schedule-driven streams
+        run their schedule out (exact — service is host-deterministic
+        and unthrottled). Service-driven (``n_ops``) streams queue
+        behind the duplex service budget shared with the other running
+        streams, so the exact step depends on future admissions; the
+        bound below assumes the request gets the whole tenant service
+        rate, which is never later than the real completion — the safe
+        direction for the engine's adaptive megastep."""
+        w = req.work
+        if self._finished(req):
+            return 0
+        if w.ops_target >= 0:
+            # the service budget is pooled across streams, so one stream
+            # can drain at up to the whole per-step budget — the bound
+            # must assume that maximum or it predicts late.
+            rate = max(1, self.ops_per_step * self.n_slots)
+            return max(1, -(-(w.ops_target - w.ops_done) // rate))
+        return max(1, len(w.schedule) - w.cursor)
+
+    def _serve_queued(self, svc: "list[Request]", pool) -> None:
+        """Drain service-driven backlogs against the per-step duplex
+        budget: up to half the active streams' aggregate op rate per
+        direction, round-robin across requests (each preferring its
+        deeper direction). Balanced backlogs use both directions — full
+        rate; unidirectional backlogs cap at one direction's share and
+        queue the rest, which is where the phased patterns' latency and
+        the policy's pairing choices become measurable."""
+        n = len(svc)
+        cap = max(1, (self.ops_per_step * n) // 2)
+        budget_r = budget_w = cap
+        total = self.ops_per_step * n
+        progress = True
+        while progress and total > 0 and (budget_r or budget_w):
+            progress = False
+            for req in svc:
+                if total <= 0:
+                    break
+                w = req.work
+                # with an empty store a GET has no target: keep the op
+                # queued (and the budget unspent) until SETs populate
+                # the keyspace, instead of silently losing it.
+                get_ok = (w.bk_get > 0 and budget_r > 0
+                          and bool(self._store))
+                set_ok = w.bk_set > 0 and budget_w > 0
+                if get_ok and set_ok:
+                    if w.bk_get >= w.bk_set:
+                        set_ok = False
+                    else:
+                        get_ok = False
+                if get_ok:
+                    b = self._read_target(w)
+                    if b is not None:
+                        w.step_reads.append(b)
+                    w.bk_get -= 1
+                    budget_r -= 1
+                    total -= 1
+                    progress = True
+                elif set_ok:
+                    w.step_writes.append(self._write_target(pool, w))
+                    w.bk_set -= 1
+                    budget_w -= 1
+                    total -= 1
+                    progress = True
 
     def _write_target(self, pool, w: _KVWork) -> int:
         if len(self._store) < self.store_blocks:
@@ -372,23 +470,37 @@ class KVStoreTenant(WorkloadAPI):
     def block_demand(self, now: int) -> list[tuple[str, list[int]]]:
         pool = self._require_bound().pool
         demand: dict[str, list[int]] = {}
+        svc: list[Request] = []
         for req in self.running():
             w = req.work
             if self._finished(req):
                 continue
             n_get, n_set = (int(x) for x in w.schedule[w.cursor])
+            if w.ops_target >= 0:
+                # service-driven: this step's scheduled ops join the
+                # backlog; the duplex budget decides what serves now.
+                w.bk_get += n_get
+                w.bk_set += n_set
+                svc.append(req)
+                continue
+            # legacy open-loop: every scheduled op serves this step.
             w.step_writes = [self._write_target(pool, w)
                              for _ in range(n_set)]
+            w.step_reads = [b for b in (self._read_target(w)
+                                        for _ in range(n_get))
+                            if b is not None]
+        if svc:
+            self._serve_queued(svc, pool)
+        for req in self.running():
+            w = req.work
+            if self._finished(req) or not (w.step_writes or w.step_reads):
+                continue
             # full-block SETs replace the whole value: no
             # read-modify-write, so a swapped-out target installs fresh
             # instead of paging its dead old contents back in.
             pool.invalidate(w.step_writes)
-            w.step_reads = [b for b in (self._read_target(w)
-                                        for _ in range(n_get))
-                            if b is not None]
             ids = w.step_writes + w.step_reads
-            if ids:
-                demand.setdefault(req.hint_path, []).extend(ids)
+            demand.setdefault(req.hint_path, []).extend(ids)
         return list(demand.items())
 
     def compute(self, pool, now: int) -> None:
@@ -525,6 +637,9 @@ class VectorSearchTenant(WorkloadAPI):
     # -- phases ------------------------------------------------------------
     def _finished(self, req: Request) -> bool:
         return req.work.cursor >= req.work.n_steps
+
+    def completion_in(self, req: Request) -> int | None:
+        return max(1, req.work.n_steps - req.work.cursor)
 
     def block_demand(self, now: int) -> list[tuple[str, list[int]]]:
         pool = self._require_bound().pool

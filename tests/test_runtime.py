@@ -1,5 +1,9 @@
 """Training/serving runtime: fault retry, resume, stragglers, elastic DP,
-tiered KV paging."""
+tiered KV paging.
+
+This module is the shim test for the deprecated ``repro.runtime.serve``
+surface (DecodeServer / OffloadedKVCache) — the only test module allowed
+to import it; everything else drives ``repro.serve`` directly."""
 
 import jax
 import jax.numpy as jnp
@@ -95,6 +99,20 @@ class TestElasticResume:
 
 
 class TestServing:
+    def test_shims_warn_with_caller_stacklevel(self):
+        """The deprecation shims name the real call site
+        (stacklevel=2), so downstream users see *their* line."""
+        import warnings
+        with pytest.warns(DeprecationWarning, match="ServeEngine"):
+            DecodeServer(_api(), None, ServeConfig())
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            OffloadedKVCache(n_blocks=4, hbm_blocks=2, block_shape=(4, 4))
+        dep = [w for w in rec if issubclass(w.category,
+                                            DeprecationWarning)]
+        assert dep and "PagedKVPool" in str(dep[0].message)
+        assert dep[0].filename == __file__      # stacklevel=2 -> caller
+
     def test_greedy_deterministic(self):
         api = _api()
         params = api.init(jax.random.PRNGKey(0))

@@ -225,7 +225,10 @@ class TestBatchedPaging:
         outs = eng.run(max_steps=100)
         for i, rid in enumerate(rids):
             np.testing.assert_array_equal(outs[rid], ref[i])
-        assert eng.paging_stats() == {"paged": False}
+        st = eng.paging_stats()
+        assert st["paged"] is False
+        assert "page_ins" not in st          # no pool, no paging counters
+        assert st["host_dispatches"] == eng.step_count  # megastep=1
 
     def test_duplex_speedup_reported(self, api, params):
         eng = ServeEngine(api, params, _cfg(max_batch=3, hbm_blocks=5))
@@ -273,30 +276,31 @@ class TestPerfContract:
         assert eng2._step_fn._cache_size() == 1
 
     def test_single_host_sync_per_step(self, api, params):
-        """The micro-step region performs no transfers at all; the only
-        device->host sync in the token loop is the once-per-step packed
-        completion readback (asserted with jax.transfer_guard)."""
+        """The whole engine step — fused micro-steps, paging planning,
+        write-through, retirement — performs exactly one device->host
+        sync: the packed completion readback (asserted with
+        jax.transfer_guard)."""
         eng = ServeEngine(api, params, _cfg())
         prompts = jax.random.randint(jax.random.PRNGKey(12), (3, 6), 0,
                                      api.cfg.vocab)
         for i in range(3):
             eng.submit(np.asarray(prompts[i]), 10)
         eng.step()          # compile everything outside the guard
+        syncs = []
         orig_readback = eng._readback
 
         def guarded_readback(packed):
+            syncs.append(1)
             with jax.transfer_guard("allow"):
                 return orig_readback(packed)
 
         eng._readback = guarded_readback
         for _ in range(3):
-            with jax.transfer_guard("disallow"):
-                advanced = eng._advance_tokens()
-            assert advanced > 0
-            # paging/admission run outside the guarded micro-step region
-            eng._page_kv()
-            eng._retire(eng.step_count)
-            eng.step_count += 1
+            n = len(syncs)
+            with jax.transfer_guard_device_to_host("disallow"):
+                report = eng.step()
+            assert len(syncs) == n + 1      # exactly the readback
+            assert report["advanced"] > 0
 
     def test_readback_is_single_packed_array(self, api, params):
         """The completion readback materializes exactly one host array

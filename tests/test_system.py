@@ -13,8 +13,8 @@ from repro.core import scheduler as sched
 from repro.core.requests import redis_pattern_specs
 from repro.models import registry as R
 from repro.optim import AdamWConfig
-from repro.runtime.serve import DecodeServer, OffloadedKVCache, ServeConfig
 from repro.runtime.train import TrainConfig, Trainer
+from repro.serve import EngineConfig, PagedKVPool, ServeEngine
 
 
 class TestPaperStory:
@@ -43,35 +43,40 @@ class TestPaperStory:
         assert abs(imp) < 0.25
 
     def test_train_then_serve_smoke(self):
-        """Train a reduced model, then serve it with batched decode."""
+        """Train a reduced model, then serve it through the megastep
+        continuous-batching engine."""
         api = R.build("smollm-135m", smoke=True)
         tr = Trainer(api, TrainConfig(
             seq_len=32, global_batch=4, steps=6,
             optim=AdamWConfig(warmup_steps=2, total_steps=6)))
         params, _, hist = tr.run()
         assert all(np.isfinite(h["loss"]) for h in hist)
-        srv = DecodeServer(api, params, ServeConfig(cache_len=64))
-        out = srv.generate(jnp.ones((2, 4), jnp.int32), 8)
-        assert out.shape == (2, 8)
+        eng = ServeEngine(api, params, EngineConfig(
+            max_batch=2, cache_len=64, megastep=4))
+        rids = [eng.submit(np.ones(4, np.int32), 8).rid
+                for _ in range(2)]
+        outs = eng.run(max_steps=200)
+        assert all(outs[r].shape == (8,) for r in rids)
 
     def test_serving_with_tiered_kv(self):
         """Decode with a KV working set smaller than the KV footprint:
         paging round-trips through the int8 host tier correctly and the
         duplex plan beats the phase-separated one."""
-        kv = OffloadedKVCache(n_blocks=24, hbm_blocks=6,
-                              block_shape=(8, 32))
+        kv = PagedKVPool(24, 6, (8, 32))
         blocks = {b: jax.random.normal(jax.random.PRNGKey(b), (8, 32)
                                        ).astype(jnp.bfloat16)
                   for b in range(12)}
         for b, x in blocks.items():
-            kv.write_block(b, x)
+            kv.step([b])
+            kv.write([b], x[None])
         # simulate decode steps touching 4-block working sets
         for step in range(6):
-            kv.touch([(step * 4 + i) % 12 for i in range(4)])
+            kv.step([(step * 4 + i) % 12 for i in range(4)])
         assert kv.duplex_speedup() >= 1.0
         for b, x in blocks.items():
+            kv.step([b])
             err = float(jnp.max(jnp.abs(
-                kv.read_block(b).astype(jnp.float32)
+                kv.read([b])[0].astype(jnp.float32)
                 - x.astype(jnp.float32))))
             assert err < 0.05
 
