@@ -15,6 +15,24 @@ import time
 #: two are never conflated.
 ENGINE, SIM = "engine", "sim"
 
+#: 1-minute loadavg per core above which wall-clock numbers are suspect
+#: (measured: concurrent pytest skews BENCH markers 3-10x).
+LOAD_THRESHOLD = 0.5
+
+
+def machine_load() -> dict:
+    """Machine-load provenance for a benchmark entry: 1-minute loadavg,
+    core count, and whether the measurement ran on a *loaded* machine
+    (wall-clock throughput markers skew 3-10x under concurrent load —
+    modelled `_us` metrics are deterministic and unaffected)."""
+    try:
+        la1 = float(os.getloadavg()[0])
+    except (OSError, AttributeError):       # platforms without loadavg
+        la1 = -1.0
+    cpus = os.cpu_count() or 1
+    return {"loadavg1": round(la1, 2), "cpus": cpus,
+            "loaded": bool(la1 >= 0 and la1 / cpus > LOAD_THRESHOLD)}
+
 
 class Bench:
     """Collects rows and renders the run.py CSV contract:
@@ -84,7 +102,10 @@ def update_bench_json(section: str, payload: dict) -> dict:
     Each benchmark module owns its section; CI diffs per workload against
     the previous CI run. A legacy flat file (pre-multi-tenant: top-level
     ``tokens_per_s``) is migrated into the ``llm`` section on first
-    touch.
+    touch. Every section gets a ``load`` provenance record
+    (``machine_load``) stamped at write time, so readers — and the CI
+    perf diff — can tell which entries were measured on a loaded
+    machine.
     """
     path = bench_json_path()
     doc: dict = {}
@@ -98,7 +119,7 @@ def update_bench_json(section: str, payload: dict) -> dict:
             doc = {"llm": {k: doc[k] for k in
                            ("tokens_per_s", "steps", "duplex_speedup")
                            if k in doc}}
-    doc[section] = payload
+    doc[section] = dict(payload, load=machine_load())
     with open(path, "w") as f:
         json.dump(doc, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -18,10 +18,10 @@ import inspect
 import sys
 import traceback
 
-from benchmarks.common import out_dir
+from benchmarks.common import LOAD_THRESHOLD, machine_load, out_dir
 
 MODULES = ("characterization", "microbench", "redis_like",
-           "llm_inference", "vectordb", "roofline")
+           "llm_inference", "vectordb", "tiered_memory", "roofline")
 
 
 def main() -> int:
@@ -41,6 +41,19 @@ def main() -> int:
     # create experiments/bench/ up front so a missing output directory can
     # never surface as a module failure mid-run.
     out_dir()
+
+    # wall-clock provenance: every BENCH_serve.json entry records the
+    # machine load it was measured under; warn up front when this run is
+    # already compromised (concurrent load skews wall-clock markers
+    # 3-10x — modelled `_us` metrics are unaffected).
+    load = machine_load()
+    if load["loaded"]:
+        print(f"WARNING: measuring on a loaded machine "
+              f"(loadavg1={load['loadavg1']} over {load['cpus']} cores "
+              f"> {LOAD_THRESHOLD}/core): wall-clock throughput rows "
+              f"(tok/s, mops, qps) can skew 3-10x; entries are stamped "
+              f"with this provenance in BENCH_serve.json",
+              file=sys.stderr)
 
     failed: list[str] = []
     print("name,provenance,us_per_call,derived")

@@ -170,6 +170,88 @@ PRESETS: dict[str, ChannelModel] = {
 
 
 # ---------------------------------------------------------------------------
+# Serving host-tier channel presets + the channel-set registry.
+#
+# The serving host pool is built from N heterogeneous channels
+# (``serve.tiers.TieredHostPool``). These presets are *capacity-normalized*
+# — equal per-direction bandwidth — so a tiered A/B isolates exactly the
+# §3 contrast the paper characterizes: a half-duplex DDR-style bus that
+# pays turnaround on every read<->write alternation versus a full-duplex
+# CXL expander whose TX/RX paths overlap. Calibration sources: turnaround
+# and write/read parity from the DDR5 measurements above (scaled to one
+# expansion channel's controller batching), CXL duplex coupling from the
+# PCIe-PHY independence the CXL.mem protocol inherits (between CXL_256's
+# measured 0.66 and the ICI/PCIe 0.9-0.95 ideal), CXL loaded latency from
+# Obs 5 (130-200 ns).
+# ---------------------------------------------------------------------------
+
+DDR5_HOST = ChannelModel(
+    name="ddr5-host",
+    read_bw=64.0,
+    write_bw=63.4,            # 0.99x write/read parity (Obs 2)
+    duplex=False,
+    turnaround_ns=13.0,       # 15-20 cycles @ 6400 MT/s (as DDR5_LOCAL)
+    batch_bytes=8192.0,       # one expansion channel batches shallower
+                              # than the 2-NUMA local controller (20000)
+    latency_ns=80.0,
+)
+
+CXL_HOST = ChannelModel(
+    name="cxl-host",
+    read_bw=64.0,
+    write_bw=64.0,
+    duplex=True,
+    duplex_coupling=0.85,     # CXL.mem over PCIe PHY: independent TX/RX
+                              # minus protocol/controller sharing
+    latency_ns=170.0,         # Obs 5 loaded latency
+)
+
+#: Host-tier kinds ``TieredHostPool`` channel sets are built from; the
+#: spec grammar is ``kind:count[,kind:count...]`` (e.g. ``ddr5:2,cxl:2``).
+TIER_PRESETS: dict[str, ChannelModel] = {
+    "ddr5": DDR5_HOST,
+    "cxl": CXL_HOST,
+}
+
+
+def parse_tier_spec(spec: str) -> list[tuple[str, ChannelModel]]:
+    """Parse a ``kind:count,...`` channel-set spec into (kind, model) pairs.
+
+    ``"ddr5:2,cxl:2"`` -> two DDR5 channels followed by two CXL channels.
+    Raises ``ValueError`` naming the known kinds on any malformed or
+    unknown entry, so CLI frontends can validate at argparse time.
+    """
+    known = ",".join(sorted(TIER_PRESETS))
+    entries = [e.strip() for e in spec.split(",") if e.strip()]
+    if not entries:
+        raise ValueError(
+            f"empty tier spec {spec!r}; expected kind:count pairs like "
+            f"'ddr5:2,cxl:2' (known kinds: {known})")
+    channels: list[tuple[str, ChannelModel]] = []
+    for entry in entries:
+        kind, sep, count = entry.partition(":")
+        if kind not in TIER_PRESETS:
+            raise ValueError(
+                f"unknown tier kind {kind!r} in {spec!r}; known kinds: "
+                f"{known}")
+        n = 1
+        if sep:
+            try:
+                n = int(count)
+            except ValueError:
+                raise ValueError(
+                    f"bad channel count {count!r} for tier {kind!r} in "
+                    f"{spec!r}; expected kind:count pairs like "
+                    f"'ddr5:2,cxl:2' (known kinds: {known})") from None
+        if n < 1:
+            raise ValueError(
+                f"tier {kind!r} needs at least one channel, got {n} "
+                f"(spec {spec!r}; known kinds: {known})")
+        channels.extend((kind, TIER_PRESETS[kind]) for _ in range(n))
+    return channels
+
+
+# ---------------------------------------------------------------------------
 # Analytic effective-bandwidth model.
 # ---------------------------------------------------------------------------
 
@@ -205,6 +287,26 @@ def effective_bandwidth(channel: ChannelModel,
     else:
         # turnaround seconds per byte moved, amortized over batch;
         # switch_cost is s/byte, tr/tw are s/GB, so scale by bytes-per-GB.
+        switch_cost = 2.0 * channel.turnaround_ns * 1e-9 / channel.batch_bytes
+        t = tr + tw + 4.0 * r * w * switch_cost * BYTES_PER_GB
+    return 1.0 / t
+
+
+def effective_bandwidth_scalar(channel: ChannelModel,
+                               read_fraction: float,
+                               sequential: bool = False) -> float:
+    """Pure-python twin of ``effective_bandwidth`` for hot host-side
+    billing paths (per-transaction channel accounting must not dispatch
+    device work or sync scalars back)."""
+    r = float(read_fraction)
+    w = 1.0 - r
+    br, bw = channel.direction_bw(sequential)
+    tr = r / br
+    tw = w / bw
+    if channel.duplex:
+        t = (max(tr, tw)
+             + (1.0 - channel.duplex_coupling) * min(tr, tw))
+    else:
         switch_cost = 2.0 * channel.turnaround_ns * 1e-9 / channel.batch_bytes
         t = tr + tw + 4.0 * r * w * switch_cost * BYTES_PER_GB
     return 1.0 / t

@@ -34,6 +34,9 @@ class MemoryHint:
         period; lets the time-series policy seed its forecast.
       duplex_opt_in: scopes may opt out of duplex intervention entirely
         (the paper's answer to the Redis read-heavy regression).
+      tier: host-memory tier preference for this scope's spilled blocks
+        ("ddr5" | "cxl"); None = derive from the traffic mix at placement
+        time (``preferred_tier``).
     """
 
     read_fraction: float | None = None
@@ -41,9 +44,18 @@ class MemoryHint:
     priority: float | None = None
     phase_period_us: float | None = None
     duplex_opt_in: bool | None = None
+    tier: str | None = None
 
     FIELDS = ("read_fraction", "sequential", "priority", "phase_period_us",
-              "duplex_opt_in")
+              "duplex_opt_in", "tier")
+
+    def __post_init__(self):
+        if self.tier is not None:
+            from repro.core.channel import TIER_PRESETS
+            if self.tier not in TIER_PRESETS:
+                raise ValueError(
+                    f"unknown tier {self.tier!r}; known tier kinds: "
+                    f"{','.join(sorted(TIER_PRESETS))}")
 
     def merged_over(self, parent: "MemoryHint") -> "MemoryHint":
         """Child values win; unset child fields inherit from parent."""
@@ -61,6 +73,26 @@ class MemoryHint:
 SYSTEM_DEFAULT = MemoryHint(read_fraction=0.5, sequential=False,
                             priority=1.0, phase_period_us=0.0,
                             duplex_opt_in=True)
+
+
+def preferred_tier(hint: MemoryHint) -> str:
+    """Host-tier preference for a scope's spilled blocks (§3 placement).
+
+    An explicit ``tier`` wins. Otherwise derive from the traffic mix:
+    mixed read/write scopes belong on full-duplex CXL channels, where
+    their opposing directions overlap; unidirectional (read- or
+    write-mostly, past the ~4:1 point where the paper's withdrawal
+    doctrine kicks in) and duplex-withdrawn scopes gain nothing from
+    duplexing and go to the low-latency half-duplex DDR5 channels,
+    which serve a single direction at full rate with no turnaround tax.
+    """
+    h = hint.resolved()
+    if hint.tier is not None:
+        return hint.tier
+    if h.duplex_opt_in is False:
+        return "ddr5"
+    rf = 0.5 if h.read_fraction is None else float(h.read_fraction)
+    return "ddr5" if (rf >= 0.8 or rf <= 0.2) else "cxl"
 
 
 def _split(path: str) -> list[str]:
@@ -172,11 +204,18 @@ def default_serving_hints() -> HintTree:
                                        duplex_opt_in=False))
 
     # -- LLM tenant: prompt processing opts out, decode is the §6.4 mix.
+    # KV paging round-trips every block (page-in + page-out = mixed by
+    # construction), so decode KV explicitly prefers the CXL tier even
+    # though its compute-side read fraction leans high; withdrawn prefill
+    # spills to DDR5.
     t.set("/serve/llm", MemoryHint(priority=1.0))
     t.set("/serve/llm/prefill", MemoryHint(read_fraction=0.95,
-                                           duplex_opt_in=False))
+                                           duplex_opt_in=False,
+                                           tier="ddr5"))
     t.set("/serve/llm/decode",
-          MemoryHint(read_fraction=0.85, phase_period_us=64.0))
+          MemoryHint(read_fraction=0.85, phase_period_us=64.0,
+                     tier="cxl"))
+    t.set("/serve/kv_cache", MemoryHint(tier="cxl"))
 
     # -- Redis-style KV-store tenant: one scope per Fig. 5 pattern. The
     # unidirectional patterns withdraw (paper: -22% read-heavy / -16%

@@ -38,6 +38,7 @@ from repro.core.telemetry import CaxRegistry
 
 PAGE_IN = 0    # host -> HBM  (prefetch / page-in; link "read")
 PAGE_OUT = 1   # HBM -> host  (writeback / eviction; link "write")
+MIGRATE = 2    # host tier -> host tier (background placement rebalance)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +86,70 @@ class OffloadPlan:
         rb = sum(s.nbytes()[0] for s in self.slots)
         wb = sum(s.nbytes()[1] for s in self.slots)
         return rb, wb
+
+
+# ---------------------------------------------------------------------------
+# Per-channel analytic timing (tiered host pools).
+#
+# A tiered host pool splits one paging transaction's transfers across
+# heterogeneous memory channels; each channel's share is billed under ITS
+# ChannelModel and the channels run in parallel, so the transaction's
+# modelled time is the max over channels. Two views per channel:
+# co-issued (both directions in flight — duplex overlap on CXL, dense
+# read<->write alternation with turnaround billing on half-duplex DDR5)
+# and phase-separated serial (all reads, one turnaround, all writes).
+# ---------------------------------------------------------------------------
+
+def channel_time_us(channel: ChannelModel, read_bytes: float,
+                    write_bytes: float, sequential: bool = True) -> float:
+    """Modelled completion time (us) of co-issued traffic on one channel.
+
+    Full-duplex channels overlap the minor direction into the major
+    one's occupancy; half-duplex channels serialize and pay the
+    batch-amortized turnaround on every alternation (densest at balanced
+    mixes) — the calibrated ``effective_bandwidth`` curve inverted into
+    a completion time.
+    """
+    total = read_bytes + write_bytes
+    if total <= 0.0:
+        return 0.0
+    r = read_bytes / total
+    gbps = channel_lib.effective_bandwidth_scalar(channel, r, sequential)
+    return total / (gbps * channel_lib.BYTES_PER_GB) * 1e6
+
+
+def phase_separated_time_us(channel: ChannelModel, read_bytes: float,
+                            write_bytes: float,
+                            sequential: bool = True) -> float:
+    """Phase-separated serial baseline on one channel: every read, then
+    every write, each at full direction rate — the evict-everything-
+    then-prefetch-everything doctrine's per-channel cost. This is the
+    regime half-duplex channels are built for (one direction switch,
+    charged nowhere, vs the co-issued model's per-batch alternation
+    tax), so it is also the honest serial bound: a DDR5 channel's
+    co-issued time is never below it."""
+    br, bw = channel.direction_bw(sequential)
+    t = (read_bytes / (br * channel_lib.BYTES_PER_GB)
+         + write_bytes / (bw * channel_lib.BYTES_PER_GB))
+    return t * 1e6
+
+
+def migration_transfers(blocks: Sequence[int], src_slots: Sequence[int],
+                        dst_slots: Sequence[int], block_bytes: float,
+                        hint_path: str = "/serve/tier_migrate"
+                        ) -> list[Transfer]:
+    """Describe host-tier rebalance moves as ``MIGRATE`` transfers.
+
+    ``src_slots``/``dst_slots`` are global host-slot indices (the tiered
+    pool's slot namespace); a migration reads the source channel and
+    writes the destination channel, and the tiered pool schedules it
+    into the idle minor direction of the CXL link it touches.
+    """
+    if not (len(blocks) == len(src_slots) == len(dst_slots)):
+        raise ValueError("each migrated block needs a src and dst slot")
+    return [Transfer(MIGRATE, src_block=int(s), dst_block=int(d),
+                     nbytes=block_bytes, hint_path=hint_path)
+            for s, d in zip(src_slots, dst_slots)]
 
 
 def _slot_dependencies(page_ins: Sequence[Transfer],

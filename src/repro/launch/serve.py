@@ -25,9 +25,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs as configs_lib
+from repro.core import channel as channel_lib
 from repro.models import registry as R
 from repro.serve import (EngineConfig, KVStoreTenant, ServeEngine,
                          VectorSearchTenant)
+
+KNOWN_TENANTS = ("redis", "vectordb")
+
+
+def _tenants_arg(value: str) -> list[str]:
+    """argparse type for --tenants: fail at parse time with the known
+    names instead of deep in engine setup."""
+    names = [t for t in value.split(",") if t]
+    unknown = [t for t in names if t not in KNOWN_TENANTS]
+    if unknown:
+        raise argparse.ArgumentTypeError(
+            f"unknown tenants {unknown}; known tenants: "
+            f"{','.join(KNOWN_TENANTS)}")
+    return names
+
+
+def _tiers_arg(value: str) -> str | None:
+    """argparse type for --tiers: validate the channel-set spec against
+    the tier-preset registry at parse time (the error names the known
+    kinds)."""
+    if not value:
+        return None
+    try:
+        channel_lib.parse_tier_spec(value)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return value
 
 
 def main() -> int:
@@ -54,10 +82,19 @@ def main() -> int:
                         "per-step loop")
     p.add_argument("--policy", default="hinted",
                    help="admission policy (core.policies registry)")
-    p.add_argument("--tenants", default="",
+    p.add_argument("--tiers", type=_tiers_arg, default=None,
+                   help="host-memory channel set for the KV pool, as "
+                        "kind:count pairs (e.g. ddr5:2,cxl:2; kinds: "
+                        f"{','.join(sorted(channel_lib.TIER_PRESETS))}). "
+                        "Default: flat single-channel host pool")
+    p.add_argument("--no-tier-migrate", action="store_true",
+                   help="disable megastep-boundary host-tier "
+                        "migrations (tiered pools only)")
+    p.add_argument("--tenants", type=_tenants_arg, default=[],
                    help="comma-separated non-LLM tenants to co-serve: "
-                        "redis,vectordb (each adds hint-scoped op "
-                        "streams through the shared pool)")
+                        f"{','.join(KNOWN_TENANTS)} (each adds "
+                        "hint-scoped op streams through the shared "
+                        "pool)")
     p.add_argument("--tenant-steps", type=int, default=32,
                    help="op-stream length for each tenant request")
     p.add_argument("--arrival-every", type=int, default=2,
@@ -76,21 +113,21 @@ def main() -> int:
     # tenants reserve per-step HBM headroom; grow the pool's working set
     # so LLM decode keeps its share (redis: 2 blocks/step, vectordb: 4).
     reserve = {"redis": 2, "vectordb": 4}
-    tenant_reserve = sum(reserve.get(t, 0)
-                         for t in args.tenants.split(",") if t)
+    tenant_names = args.tenants            # validated at argparse time
+    tenant_reserve = sum(reserve.get(t, 0) for t in tenant_names)
     cfg = EngineConfig(
         max_batch=args.batch, cache_len=args.cache_len,
         block_tokens=args.block_tokens,
         hbm_blocks=max(args.hbm_blocks, tenant_reserve + 4),
         pool_blocks=args.pool_blocks, prefill_chunk=args.prefill_chunk,
         max_queue=max(args.requests, args.batch) + 8, policy=args.policy,
-        paging=not args.no_paging, megastep=args.megastep)
-    tenant_names = [t for t in args.tenants.split(",") if t]
-    unknown = [t for t in tenant_names if t not in ("redis", "vectordb")]
-    if unknown:
-        p.error(f"unknown tenants {unknown}; choose from redis,vectordb")
+        paging=not args.no_paging, megastep=args.megastep,
+        tiers=args.tiers, tier_migrate=not args.no_tier_migrate)
     if tenant_names and args.no_paging:
         p.error("tenants serve from the paged pool; drop --no-paging")
+    if args.tiers and args.no_paging:
+        p.error("--tiers configures the paged pool's host side; drop "
+                "--no-paging")
 
     def build_and_submit():
         engine = ServeEngine(api, params, cfg)
@@ -138,6 +175,11 @@ def main() -> int:
           f"({total_tokens / dt:.1f} tok/s)")
     print(f"first request: admitted step {first.admitted_step}, done step "
           f"{first.done_step}, tokens {outs[rids[0]][:8].tolist()}...")
+    if engine.paged and engine.pool.tiered:
+        ts = engine.pool.tier_stats()
+        print(f"tiered host pool ({args.tiers}): "
+              f"tier_speedup={ts['tier_speedup']:.2f}x vs all-DDR5 "
+              f"serial, {ts['migrations']} boundary migrations")
 
     def _round(v):
         if isinstance(v, float):
@@ -151,6 +193,7 @@ def main() -> int:
         "policy": args.policy,
         "requests": args.requests,
         "tenants": tenant_names,
+        "tiers": args.tiers,
         "slots": args.batch,
         "generated_tokens": int(total_tokens),
         "steps": int(engine.step_count),

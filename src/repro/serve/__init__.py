@@ -6,6 +6,10 @@ The serving stack, layered (see README.md):
                   the simulator uses; every tenant's requests (LLM
                   prefills, KV-store op streams, vector-query walks) wait
                   here as hint-scoped streams;
+  TieredHostPool— heterogeneous DDR5+CXL host channels behind the pool:
+                  hint-driven weighted-interleave placement map,
+                  per-channel billing, idle-minor-direction boundary
+                  migrations (``EngineConfig.tiers="ddr5:2,cxl:2"``);
   PagedKVPool   — vectorized block-table KV pool (host-numpy residency/
                   slot-map/LRU-clock metadata); each step's page-in/
                   page-out sets planned per hint scope by
@@ -26,6 +30,7 @@ The serving stack, layered (see README.md):
 from repro.serve.engine import EngineConfig, ServeEngine, reference_decode
 from repro.serve.kv_pool import PagedKVPool
 from repro.serve.queue import Request, RequestQueue, TrafficProfile
+from repro.serve.tiers import TieredHostPool
 from repro.serve.workloads import (KVStoreTenant, VectorSearchTenant,
                                    WorkloadAPI)
 
@@ -36,6 +41,7 @@ __all__ = [
     "Request",
     "RequestQueue",
     "ServeEngine",
+    "TieredHostPool",
     "TrafficProfile",
     "VectorSearchTenant",
     "WorkloadAPI",

@@ -128,6 +128,11 @@ class EngineConfig:
     megastep: int = 1           # engine steps fused per host dispatch (K);
                                 # run() adapts K <= megastep between
                                 # admission events. 1 = classic step loop.
+    tiers: str | tuple | None = None
+                                # host-memory channel set for the pool
+                                # ("ddr5:2,cxl:2"); None = flat pool
+    tier_migrate: bool = True   # rebalance host placement at megastep
+                                # boundaries (tiered pools only)
 
     def resolved_pool_blocks(self) -> int:
         if self.pool_blocks:
@@ -425,7 +430,8 @@ class ServeEngine:
             kv_dims = L * 2 * KV * hd
             self.pool = PagedKVPool(
                 cfg.resolved_pool_blocks(), cfg.hbm_blocks,
-                (cfg.block_tokens, kv_dims), hints=self.hints)
+                (cfg.block_tokens, kv_dims), hints=self.hints,
+                tiers=cfg.tiers)
             kv_bytes = float(kv_dims * 2)
         else:
             self.pool = None
@@ -591,6 +597,14 @@ class ServeEngine:
                                          np.float32),
                     utilization=np.float32(
                         len(rows) / max(1, self.cfg.max_batch))))
+
+        if self.paged and self.pool.tiered and self.cfg.tier_migrate:
+            # boundary tier rebalance: planned from this megastep's
+            # per-channel traffic window (host metadata only), executed
+            # as one dispatched row copy riding the CXL links' idle
+            # minor direction — before the readback below, so the move
+            # overlaps the still-in-flight compute.
+            report["migrations"] = self.pool.migrate_tiers()["migrations"]
 
         advanced = 0
         if live:
@@ -1022,6 +1036,9 @@ class ServeEngine:
         stats = {"paged": True, **self.pool.stats,
                  "paging_steps": self.pool.stats["steps"], **self.stats(),
                  "duplex_speedup": self.pool.duplex_speedup()}
+        if self.pool.tiered:
+            stats["tiers"] = self.pool.tier_stats()
+            stats["tier_speedup"] = self.pool.tier_speedup()
         stats["by_path"] = {
             path: {**st, "duplex_speedup": self.pool.duplex_speedup(path)}
             for path, st in self.pool.stats["by_path"].items()}

@@ -39,12 +39,14 @@ from repro.core import channel as channel_lib
 from repro.core.hints import HintTree, default_serving_hints
 from repro.core.offload import DuplexOffloadEngine, plan_serial
 from repro.kernels import ops as kernel_ops
+from repro.serve.tiers import TieredHostPool
 
 
 def _fresh_stats() -> dict:
     return {"page_ins": 0, "page_outs": 0, "duplex_us": 0.0,
             "serial_us": 0.0, "kernel_calls": 0, "steps": 0,
-            "by_path": {}}
+            "tier_us": 0.0, "ddr5_us": 0.0, "migrations": 0,
+            "migrate_us": 0.0, "by_path": {}}
 
 
 def _fresh_path_stats() -> dict:
@@ -108,6 +110,16 @@ def _commit_paging(hbm, host_q, host_scale, in_deq, out_q, out_scale,
     return hbm, host_q, host_scale
 
 
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _migrate_rows(host_q, host_scale, src, dst):
+    """Host-tier rebalance: copy quantized rows ``src -> dst`` verbatim
+    (int8 payload + scales — migrations are bit-exact by construction).
+    Fixed width: padding rows carry ``dst == total_slots`` and drop, so
+    the program compiles once per pool shape, never per move count."""
+    return (host_q.at[dst].set(host_q[src], mode="drop"),
+            host_scale.at[dst].set(host_scale[src], mode="drop"))
+
+
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _write_blocks(hbm, dst, data):
     """Fixed-width write-through scatter; out-of-range dst rows (padding
@@ -127,24 +139,46 @@ def _write_blocks_at(hbm, dst, staged, t):
 
 
 class PagedKVPool:
-    """Block-table KV pool: HBM working set + int8 host tier.
+    """Block-table KV pool: HBM working set + tiered int8 host side.
 
     ``n_blocks`` logical blocks of ``block_shape = (tokens, kv_dims)``;
     at most ``hbm_blocks`` are HBM-resident at a time. Logical block ids are
     allocated per request (``alloc``/``free``) or caller-managed.
+
+    ``tiers`` backs the host side with heterogeneous memory channels
+    (``serve.tiers.TieredHostPool``): a ``"ddr5:2,cxl:2"`` spec string or
+    a (kind, ChannelModel) sequence. Spilled blocks get a host *slot*
+    through the hint-driven weighted-interleave placement map, traffic is
+    billed per channel, ``tier_speedup()`` compares against the all-DDR5
+    serial counterfactual, and ``migrate_tiers()`` (called by the engine
+    at megastep boundaries) rebalances mismatched blocks through the idle
+    minor direction of the CXL links. ``tiers=None`` is the flat
+    single-channel pool with identity placement — the pre-tiered layout
+    and billing, bit-for-bit.
     """
 
     def __init__(self, n_blocks: int, hbm_blocks: int, block_shape,
                  hints: HintTree | None = None,
-                 link: channel_lib.ChannelModel = channel_lib.PCIE_HOST):
+                 link: channel_lib.ChannelModel = channel_lib.PCIE_HOST,
+                 tiers=None, migrate_max: int = 8):
         if hbm_blocks < 1:
             raise ValueError("need at least one HBM block")
         self.n_blocks = n_blocks
         self.hbm_capacity = hbm_blocks
         self.block_shape = tuple(block_shape)        # (tokens, kv_dims)
+        block_bytes = float(np.prod(self.block_shape) * 2)  # bf16
+        if tiers is None:
+            self.host = TieredHostPool.flat(n_blocks, link, block_bytes)
+        else:
+            self.host = TieredHostPool.from_spec(n_blocks, tiers,
+                                                 block_bytes)
+        self.tiered = self.host.tiered
+        self.migrate_max = int(migrate_max)
         self.hbm = jnp.zeros((hbm_blocks,) + self.block_shape, jnp.bfloat16)
-        self.host_q = jnp.zeros((n_blocks,) + self.block_shape, jnp.int8)
-        self.host_scale = jnp.ones((n_blocks, self.block_shape[0], 1),
+        self.host_q = jnp.zeros((self.host.total_slots,) + self.block_shape,
+                                jnp.int8)
+        self.host_scale = jnp.ones((self.host.total_slots,
+                                    self.block_shape[0], 1),
                                    jnp.float32)
         # block table (host-resident residency metadata — never feeds
         # device compute, so it lives in numpy):
@@ -183,6 +217,7 @@ class PagedKVPool:
         self._allocated[blocks] = False
         self._dirty[blocks] = False
         self._has_host[blocks] = False
+        self.host.release(blocks)
         slots = self.slot_of[blocks]
         self.block_at[slots[slots >= 0]] = -1
         self.slot_of[blocks] = -1
@@ -201,6 +236,9 @@ class PagedKVPool:
         nonres = blocks[self.slot_of[blocks] < 0]
         self._has_host[nonres] = False
         self._dirty[nonres] = False
+        # the dead host copy's tier slot is reclaimed; the overwrite will
+        # re-place the block under whatever scope spills it next.
+        self.host.release(nonres)
 
     # -- residency ---------------------------------------------------------
     def resident_blocks(self) -> np.ndarray:
@@ -228,6 +266,14 @@ class PagedKVPool:
         for s in occupied.tolist():
             if slot_of[block_at[s]] != s:
                 raise AssertionError(f"dangling slot {s}")
+        # host-side placement-map invariants (tiered or identity):
+        self.host.check_invariants()
+        unplaced = np.flatnonzero(self._has_host
+                                  & (self.host.slot_of < 0))
+        if unplaced.size:
+            raise AssertionError(
+                f"blocks {unplaced.tolist()} have a host copy but no "
+                f"host-tier slot")
 
     # -- the per-step batched paging transaction ---------------------------
     def step(self, needed, hint_path: str = "/serve/kv_cache") -> dict:
@@ -344,32 +390,58 @@ class PagedKVPool:
         outs = victims[self._dirty[victims]]       # real out traffic
         out_slots = self.slot_of[outs]
         silent_slots = self.slot_of[victims[~self._dirty[victims]]]
-        block_bytes = float(np.prod(self.block_shape) * 2)  # bf16
+        block_bytes = self.host.block_bytes
         in_deq = out_q = out_scale = None
+        out_hslots = np.zeros((0,), np.int32)
         if stale.size or outs.size:
-            duplex_ok = self.engine.hints.resolve(
-                hint_path).resolved().duplex_opt_in
-            plan = self.engine.plan_kv_paging(
-                needed_host_blocks=stale.tolist(),
-                evict_hbm_blocks=out_slots.tolist(),
-                free_hbm_blocks=np.concatenate(
-                    [free_slots, silent_slots]).tolist(),
-                host_dst_blocks=outs.tolist(),
-                block_bytes=block_bytes,
-                hint_path=hint_path)
-            serial = plan_serial(
-                [s.page_in for s in plan.slots if s.page_in],
-                [s.page_out for s in plan.slots if s.page_out],
-                self.engine.link)
+            resolved = self.engine.hints.resolve(hint_path).resolved()
+            duplex_ok = resolved.duplex_opt_in
+            # host-tier placement: departures get (or keep) a host slot
+            # under the scope's preferred tier; arrivals refresh their
+            # preference (a scope change arms a boundary migration) but
+            # evictions do not — the evicting scope may not own the
+            # victim (victims are picked jointly across scopes).
+            pref = self.host.preferred_kind(resolved)
+            in_hslots = self.host.place(stale, pref)
+            out_hslots = self.host.place(outs, pref, refresh=False)
+            if self.tiered:
+                # per-channel billing: each channel's share of the
+                # transaction under ITS model (half-duplex DDR5 with
+                # turnaround, duplex-overlapped CXL), channels parallel;
+                # plus the all-DDR5 serial counterfactual tier_speedup
+                # measures against. (The flat pool's transfer-plan
+                # construction is skipped: its modelled times would be
+                # discarded, and this is the per-transaction hot path.)
+                ch_rd, ch_wr, duplex_us, serial_us = \
+                    self.host.bill_transaction(in_hslots, out_hslots,
+                                               co_issued=bool(duplex_ok))
+                self.stats["tier_us"] += duplex_us
+                self.stats["ddr5_us"] += self.host.ddr5_baseline_us(
+                    ch_rd, ch_wr)
+            else:
+                plan = self.engine.plan_kv_paging(
+                    needed_host_blocks=stale.tolist(),
+                    evict_hbm_blocks=out_slots.tolist(),
+                    free_hbm_blocks=np.concatenate(
+                        [free_slots, silent_slots]).tolist(),
+                    host_dst_blocks=outs.tolist(),
+                    block_bytes=block_bytes,
+                    hint_path=hint_path)
+                serial = plan_serial(
+                    [s.page_in for s in plan.slots if s.page_in],
+                    [s.page_out for s in plan.slots if s.page_out],
+                    self.engine.link)
+                duplex_us = plan.modelled_time_us()
+                serial_us = serial.modelled_time_us()
             bp = self.stats["by_path"].setdefault(hint_path,
                                                   _fresh_path_stats())
             for st, key, val in (
-                    (self.stats, "duplex_us", plan.modelled_time_us()),
-                    (self.stats, "serial_us", serial.modelled_time_us()),
+                    (self.stats, "duplex_us", duplex_us),
+                    (self.stats, "serial_us", serial_us),
                     (self.stats, "page_ins", int(stale.size)),
                     (self.stats, "page_outs", int(outs.size)),
-                    (bp, "duplex_us", plan.modelled_time_us()),
-                    (bp, "serial_us", serial.modelled_time_us()),
+                    (bp, "duplex_us", duplex_us),
+                    (bp, "serial_us", serial_us),
                     (bp, "page_ins", int(stale.size)),
                     (bp, "page_outs", int(outs.size))):
                 st[key] += val
@@ -381,7 +453,7 @@ class PagedKVPool:
                 # padded to a uniform grid.
                 in_q, in_scale, out_x = _gather_duplex(
                     self.host_q, self.host_scale, self.hbm,
-                    jnp.asarray(stale), jnp.asarray(out_slots))
+                    jnp.asarray(in_hslots), jnp.asarray(out_slots))
                 in_deq, out_q, out_scale = kernel_ops.duplex_kv_stream(
                     in_q, in_scale, out_x, stage_blocks=STAGE_BLOCKS)
                 self.stats["kernel_calls"] += 1
@@ -396,7 +468,8 @@ class PagedKVPool:
                     self.stats["kernel_calls"] += 1
                 if stale.size:
                     in_q, in_scale = _gather_in(
-                        self.host_q, self.host_scale, jnp.asarray(stale))
+                        self.host_q, self.host_scale,
+                        jnp.asarray(in_hslots))
                     in_deq = kernel_ops.dequant_kv_stream(in_q, in_scale)
                     self.stats["kernel_calls"] += 1
 
@@ -411,7 +484,8 @@ class PagedKVPool:
         dst = dst.astype(np.int32)
         self.hbm, self.host_q, self.host_scale = _commit_paging(
             self.hbm, self.host_q, self.host_scale, in_deq, out_q,
-            out_scale, jnp.asarray(outs), jnp.asarray(dst[:stale.size]),
+            out_scale, jnp.asarray(out_hslots),
+            jnp.asarray(dst[:stale.size]),
             jnp.asarray(dst[stale.size:]))
         if outs.size:
             self._has_host[outs] = True
@@ -483,7 +557,68 @@ class PagedKVPool:
         self._touch(blocks)
         return self.hbm[jnp.asarray(slots)]
 
+    # -- host-tier migrations (megastep boundaries) -------------------------
+    def migrate_tiers(self, max_moves: int | None = None) -> dict:
+        """Rebalance host-tier placement at a megastep boundary.
+
+        Planning is pure host metadata (the hotness clock ``last_use``,
+        the placement map, the boundary window's per-channel traffic);
+        execution is ONE fixed-width jitted row copy — dispatch-only, so
+        a megastep with migrations still performs zero extra host syncs.
+        CXL legs ride each link's idle minor direction (budgeted from
+        the window the plan just closed); the half-duplex legs' modelled
+        time lands in ``stats["migrate_us"]``. Data is moved verbatim
+        (quantized rows + scales), so served results are bit-exact
+        whether or not migrations run.
+        """
+        if not self.tiered:
+            return {"migrations": 0}
+        width = self.migrate_max if max_moves is None \
+            else min(int(max_moves), self.migrate_max)
+        plan = self.host.plan_migrations(self.last_use, self._has_host,
+                                         width)
+        if len(plan):
+            src = np.zeros((self.migrate_max,), np.int32)
+            dst = np.full((self.migrate_max,), self.host.total_slots,
+                          np.int32)
+            src[:len(plan)] = plan.src_slots
+            dst[:len(plan)] = plan.dst_slots
+            try:
+                self.host_q, self.host_scale = _migrate_rows(
+                    self.host_q, self.host_scale, jnp.asarray(src),
+                    jnp.asarray(dst))
+            except Exception:
+                # the plan reserved its destination slots; hand them back
+                # so a failed dispatch cannot leak host-tier capacity.
+                self.host.abandon(plan)
+                raise
+        self.host.apply(plan)   # also closes the traffic window
+        self.stats["migrations"] += len(plan)
+        self.stats["migrate_us"] += plan.migrate_us
+        return {"migrations": len(plan)}
+
     # -- reporting ---------------------------------------------------------
+    def tier_speedup(self) -> float:
+        """Modelled all-DDR5-serial vs tiered link-time ratio for the
+        pool's real paging traffic (1.0 for a flat pool — there is no
+        counterfactual to beat)."""
+        if self.stats["tier_us"] == 0:
+            return 1.0
+        return self.stats["ddr5_us"] / self.stats["tier_us"]
+
+    def tier_stats(self) -> dict:
+        """Per-channel placement/traffic/migration accounting plus the
+        tier A/B summary (tiered pools only)."""
+        if not self.tiered:
+            return {"tiered": False}
+        return {"tiered": True,
+                "channels": self.host.stats(),
+                "migrations": self.stats["migrations"],
+                "migrate_us": round(self.stats["migrate_us"], 3),
+                "tier_us": round(self.stats["tier_us"], 3),
+                "ddr5_us": round(self.stats["ddr5_us"], 3),
+                "tier_speedup": round(self.tier_speedup(), 4)}
+
     def duplex_speedup(self, hint_path: str | None = None) -> float:
         """Modelled serial/duplex link-time ratio — overall, or for one
         hint scope's traffic (``stats["by_path"]``). Withdrawn scopes
@@ -496,3 +631,4 @@ class PagedKVPool:
 
     def reset_stats(self) -> None:
         self.stats = _fresh_stats()
+        self.host.reset_stats()

@@ -89,3 +89,24 @@ class TestChannelStep:
         rc, wc = ch.CXL_512.bytes_per_step()
         state, r, w = ch.channel_step(params, state, 1e15, 1e15)
         assert float(r) <= rc * 1.001 and float(w) <= wc * 1.001
+
+
+class TestTierPresets:
+    """Serving host-tier presets + the scalar billing twin."""
+
+    def test_tier_presets_capacity_normalized(self):
+        d, c = ch.TIER_PRESETS["ddr5"], ch.TIER_PRESETS["cxl"]
+        assert not d.duplex and c.duplex
+        # equal per-direction capacity: the tiered A/B isolates the
+        # duplexing contrast, not a bandwidth gap
+        assert abs(d.read_bw - c.read_bw) / c.read_bw < 0.05
+
+    @pytest.mark.parametrize("name", ["ddr5", "cxl"])
+    @pytest.mark.parametrize("rf", [0.0, 0.25, 0.5, 0.8, 1.0])
+    def test_scalar_bandwidth_matches_jnp_model(self, name, rf):
+        """The pure-python billing path is the calibrated jnp curve."""
+        c = ch.TIER_PRESETS[name]
+        for seq in (False, True):
+            ref = float(ch.effective_bandwidth(c, rf, seq))
+            got = ch.effective_bandwidth_scalar(c, rf, seq)
+            assert got == pytest.approx(ref, rel=1e-5)

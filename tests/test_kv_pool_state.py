@@ -1,0 +1,119 @@
+"""PagedKVPool invariants under random operation sequences.
+
+A hypothesis state machine drives random ``alloc`` / ``free`` /
+``invalidate`` / ``write`` / ``step`` / ``migrate_tiers`` sequences —
+across flat and tiered host configurations and every serving hint scope
+family — and checks ``check_invariants()`` (slot-map bijections, HBM
+capacity, host-tier placement maps, per-channel free-list accounting)
+after every rule, plus the cheap semantic invariants the maps imply
+(dirty/has-host blocks are allocated, resident counts bounded).
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import settings  # noqa: E402
+from hypothesis.stateful import (RuleBasedStateMachine, initialize,  # noqa: E402
+                                 invariant, rule, run_state_machine_as_test)
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core.hints import HintTree, MemoryHint
+from repro.serve.kv_pool import PagedKVPool
+
+N_BLOCKS = 16
+HBM = 4
+SHAPE = (4, 16)
+
+SCOPES = ["/t/mix", "/t/read", "/t/write", "/t/withdrawn"]
+
+
+def _tree() -> HintTree:
+    t = HintTree()
+    t.set("/t/mix", MemoryHint(read_fraction=0.5))
+    t.set("/t/read", MemoryHint(read_fraction=0.95))
+    t.set("/t/write", MemoryHint(read_fraction=0.05))
+    t.set("/t/withdrawn", MemoryHint(read_fraction=0.5,
+                                     duplex_opt_in=False))
+    return t
+
+
+class PoolMachine(RuleBasedStateMachine):
+    @initialize(tiers=st.sampled_from(
+        [None, "ddr5:1,cxl:1", "cxl:2", "ddr5:2,cxl:2"]))
+    def setup(self, tiers):
+        self.pool = PagedKVPool(N_BLOCKS, HBM, SHAPE, hints=_tree(),
+                                tiers=tiers)
+
+    def _pick(self, seed: int, pop: np.ndarray, k: int) -> list[int]:
+        if pop.size == 0 or k <= 0:
+            return []
+        rng = np.random.default_rng(seed)
+        k = min(k, pop.size)
+        return rng.choice(pop, size=k, replace=False).tolist()
+
+    @rule(k=st.integers(1, 3))
+    def alloc(self, k):
+        free = int((~self.pool._allocated).sum())
+        if free >= k:
+            self.pool.alloc(k)
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 4))
+    def free(self, seed, k):
+        ids = self._pick(seed, np.flatnonzero(self.pool._allocated), k)
+        self.pool.free(ids)
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 3))
+    def invalidate(self, seed, k):
+        ids = self._pick(seed, np.flatnonzero(self.pool._allocated), k)
+        self.pool.invalidate(ids)
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, HBM),
+          scope=st.sampled_from(SCOPES))
+    def step(self, seed, k, scope):
+        ids = self._pick(seed, np.flatnonzero(self.pool._allocated), k)
+        if ids:
+            self.pool.step(ids, hint_path=scope)
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, HBM))
+    def write_resident(self, seed, k):
+        ids = self._pick(seed, self.pool.resident_blocks(), k)
+        if ids:
+            data = jnp.asarray(
+                np.random.default_rng(seed).standard_normal(
+                    (len(ids),) + SHAPE).astype(np.float32))
+            self.pool.write(np.asarray(ids, np.int32), data)
+
+    @rule(max_moves=st.integers(0, 4))
+    def migrate(self, max_moves):
+        self.pool.migrate_tiers(max_moves=max_moves)
+
+    @invariant()
+    def maps_consistent(self):
+        if not hasattr(self, "pool"):
+            return
+        self.pool.check_invariants()
+        p = self.pool
+        # semantic invariants the maps imply
+        assert len(p.resident_blocks()) <= p.hbm_capacity
+        assert not (p._dirty & ~p._allocated).any()
+        assert not (p._has_host & ~p._allocated).any()
+        if p.tiered:
+            # every host-tier slot assignment points at a live block
+            placed = np.flatnonzero(p.host.slot_of >= 0)
+            assert p._allocated[placed].all()
+
+
+TestPoolStateMachine = PoolMachine.TestCase
+TestPoolStateMachine.settings = settings(
+    max_examples=12, stateful_step_count=40, deadline=None)
+
+
+def test_machine_smoke():
+    """One deterministic pass so the machine's rules stay exercised even
+    under a minimal hypothesis profile."""
+    run_state_machine_as_test(
+        PoolMachine,
+        settings=settings(max_examples=3, stateful_step_count=25,
+                          deadline=None))

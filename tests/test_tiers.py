@@ -1,0 +1,428 @@
+"""Tiered host memory: DDR5+CXL channel sets behind the paged pool.
+
+Acceptance contracts under test:
+  * channel-set registry — ``parse_tier_spec`` validates kinds/counts
+    with an error naming the known kinds;
+  * placement — mixed scopes spill to CXL channels, read-mostly and
+    duplex-withdrawn scopes to DDR5, weighted-interleaved within a
+    tier; the flat pool keeps identity placement;
+  * billing honesty — per-channel models: a withdrawn scope still
+    reports duplex_speedup exactly 1.0 on a tiered pool, half-duplex
+    channels never report overlap wins, and the §3 crossover holds on
+    the real data plane (tiered beats all-DDR5 by >= 1.4x modelled link
+    time at balanced ratios, matches all-CXL, and the unidirectional
+    extremes are near-flat across channel sets);
+  * migrations — planned only into idle duplex-direction capacity of
+    the boundary window, executed as one dispatch-only jitted row copy
+    (zero device->host syncs), bit-exact data, map invariants held;
+  * engine integration — serving results are bit-identical between
+    flat / tiered / migration-disabled runs at megastep 1, 4 and 8, and
+    a tiered megastep still performs exactly ONE host sync.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import channel as channel_lib
+from repro.core import hints as hints_lib
+from repro.core.hints import HintTree, MemoryHint
+from repro.models import registry as R
+from repro.serve import (EngineConfig, KVStoreTenant, PagedKVPool,
+                         ServeEngine)
+
+
+def _mix_tree():
+    t = HintTree()
+    t.set("/t/mix", MemoryHint(read_fraction=0.5))
+    t.set("/t/read", MemoryHint(read_fraction=0.95))
+    t.set("/t/write", MemoryHint(read_fraction=0.05))
+    t.set("/t/withdrawn", MemoryHint(read_fraction=0.5,
+                                     duplex_opt_in=False))
+    return t
+
+
+def _pool(tiers="ddr5:1,cxl:1", n=24, hbm=4, shape=(8, 32)):
+    return PagedKVPool(n, hbm, shape, hints=_mix_tree(), tiers=tiers)
+
+
+def _data(b, shape=(8, 32)):
+    return jax.random.normal(jax.random.PRNGKey(b), shape).astype(
+        jnp.bfloat16)
+
+
+def _fill(pool, ids, path="/t/mix"):
+    pool.step(list(ids), hint_path=path)
+    pool.write(list(ids), jnp.stack([_data(b) for b in ids]))
+
+
+def _kind_of(pool, block):
+    s = pool.host.slot_of[block]
+    assert s >= 0
+    return pool.host.kinds[pool.host.channel_of_slot[s]]
+
+
+class TestRegistry:
+    def test_parse_tier_spec(self):
+        channels = channel_lib.parse_tier_spec("ddr5:2,cxl:2")
+        assert [k for k, _ in channels] == ["ddr5", "ddr5", "cxl", "cxl"]
+        assert not channels[0][1].duplex
+        assert channels[2][1].duplex
+        # bare kind = one channel
+        assert len(channel_lib.parse_tier_spec("cxl")) == 1
+
+    @pytest.mark.parametrize("bad", ["", "dd5:2", "ddr5:zero", "ddr5:0",
+                                     "ddr5:1,hbm:1"])
+    def test_bad_specs_name_known_kinds(self, bad):
+        with pytest.raises(ValueError, match="known kinds"):
+            channel_lib.parse_tier_spec(bad)
+
+    def test_preferred_tier_derivation(self):
+        assert hints_lib.preferred_tier(MemoryHint(read_fraction=0.5)) \
+            == "cxl"
+        assert hints_lib.preferred_tier(MemoryHint(read_fraction=0.95)) \
+            == "ddr5"
+        assert hints_lib.preferred_tier(MemoryHint(read_fraction=0.05)) \
+            == "ddr5"
+        # withdrawal forces DDR5, explicit tier wins over everything
+        assert hints_lib.preferred_tier(
+            MemoryHint(read_fraction=0.5, duplex_opt_in=False)) == "ddr5"
+        assert hints_lib.preferred_tier(
+            MemoryHint(read_fraction=0.95, tier="cxl")) == "cxl"
+
+    def test_serving_hints_declare_tiers(self):
+        t = hints_lib.default_serving_hints()
+        assert t.resolve("/serve/kv_cache").resolved().tier == "cxl"
+        assert hints_lib.preferred_tier(
+            t.resolve("/serve/llm/prefill")) == "ddr5"
+        assert hints_lib.preferred_tier(
+            t.resolve("/serve/redis/read_heavy")) == "ddr5"
+        assert hints_lib.preferred_tier(
+            t.resolve("/serve/redis/gaussian")) == "cxl"
+
+
+class TestPlacement:
+    def test_flat_pool_identity_placement(self):
+        pool = PagedKVPool(16, 4, (8, 32))
+        assert not pool.tiered
+        _fill(pool, range(4), path="/serve/kv_cache")
+        pool.step(range(4, 8), hint_path="/serve/kv_cache")
+        # spilled blocks sit at host slot == block id (pre-tiered layout)
+        assert (pool.host.slot_of[:4] == np.arange(4)).all()
+        pool.check_invariants()
+
+    def test_scope_mix_routes_tiers(self):
+        pool = _pool()
+        _fill(pool, range(4), path="/t/mix")
+        pool.step(range(4, 8), hint_path="/t/mix")      # spill 0..3
+        assert all(_kind_of(pool, b) == "cxl" for b in range(4))
+        _fill(pool, range(8, 12), path="/t/read")
+        pool.step(range(12, 16), hint_path="/t/read")   # spill 8..11
+        assert all(_kind_of(pool, b) == "ddr5" for b in range(8, 12))
+        pool.check_invariants()
+
+    def test_withdrawn_scope_routes_ddr5(self):
+        pool = _pool()
+        _fill(pool, range(4), path="/t/withdrawn")
+        pool.step(range(4, 8), hint_path="/t/withdrawn")
+        assert all(_kind_of(pool, b) == "ddr5" for b in range(4))
+
+    def test_weighted_interleave_within_tier(self):
+        pool = _pool(tiers="cxl:2", n=32, hbm=8)
+        for start in (0, 8):
+            _fill(pool, range(start, start + 8), path="/t/mix")
+        pool.step(range(16, 24), hint_path="/t/mix")    # spill 8 early
+        pool.step(range(24, 32), hint_path="/t/mix")    # spill 8 more
+        chans = pool.host.channel_of_slot[
+            pool.host.slot_of[np.flatnonzero(pool.host.slot_of >= 0)]]
+        counts = np.bincount(chans, minlength=2)
+        # equal-weight channels split the spill stream evenly
+        assert abs(int(counts[0]) - int(counts[1])) <= 1
+        pool.check_invariants()
+
+    def test_free_and_invalidate_release_host_slots(self):
+        pool = _pool()
+        _fill(pool, range(4), path="/t/mix")
+        pool.step(range(4, 8), hint_path="/t/mix")
+        assert (pool.host.slot_of[:4] >= 0).all()
+        pool.free([0, 1])
+        assert (pool.host.slot_of[:2] < 0).all()
+        pool.invalidate([2, 3])        # non-resident: host copy is dead
+        assert (pool.host.slot_of[2:4] < 0).all()
+        pool.check_invariants()
+
+
+class TestTieredBilling:
+    def test_withdrawn_scope_speedup_exactly_one(self):
+        pool = _pool()
+        _fill(pool, range(4), path="/t/withdrawn")
+        pool.step(range(4, 8), hint_path="/t/withdrawn")
+        _fill(pool, range(4, 8), path="/t/withdrawn")
+        pool.step(range(4), hint_path="/t/withdrawn")   # ins + outs
+        st = pool.stats["by_path"]["/t/withdrawn"]
+        assert st["page_ins"] > 0 and st["page_outs"] > 0
+        assert st["fused_calls"] == 0
+        assert pool.duplex_speedup("/t/withdrawn") == 1.0
+
+    def test_withdrawn_busy_us_matches_transaction_billing(self):
+        """Per-channel busy_us uses the same phase-separated model a
+        withdrawn transaction is billed under — channel stats must sum
+        to the transaction-level tier time, not a co-issued fiction."""
+        pool = _pool(tiers="ddr5:1")
+        _fill(pool, range(4), path="/t/withdrawn")
+        pool.step(range(4, 8), hint_path="/t/withdrawn")
+        _fill(pool, range(4, 8), path="/t/withdrawn")
+        pool.step(range(4), hint_path="/t/withdrawn")   # ins + outs
+        busy = sum(t["busy_us"] for t in pool.host.totals)
+        assert busy == pytest.approx(pool.stats["tier_us"], rel=1e-3)
+        assert pool.stats["tier_us"] == pytest.approx(
+            pool.stats["serial_us"], rel=1e-6)
+
+    def test_half_duplex_channel_never_wins_overlap(self):
+        """Mixed opted-in traffic forced onto DDR5-only channels pays
+        the turnaround tax: co-issued time >= phase-separated serial."""
+        pool = _pool(tiers="ddr5:2")
+        _fill(pool, range(4), path="/t/mix")
+        pool.step(range(4, 8), hint_path="/t/mix")
+        _fill(pool, range(4, 8), path="/t/mix")
+        pool.step(range(4), hint_path="/t/mix")
+        assert pool.stats["page_ins"] > 0 and pool.stats["page_outs"] > 0
+        assert pool.duplex_speedup() <= 1.0
+
+    def test_crossover_shape_on_real_data_plane(self):
+        """The §3 acceptance numbers, measured config-vs-config on one
+        identical traffic trace through the real gather/kernel/commit
+        path (modelled link time — deterministic, load-immune)."""
+        from benchmarks.tiered_memory import CONFIGS, _drive, _gbps
+        bal = {k: _gbps(_drive(s, 0.5, steps=8))
+               for k, s in CONFIGS.items()}
+        ro = {k: _gbps(_drive(s, 1.0, steps=8))
+              for k, s in CONFIGS.items()}
+        # balanced: tiered rides CXL duplex, >= 1.4x over all-DDR5
+        assert bal["tiered"] / bal["ddr5"] >= 1.4
+        # ... and matches all-CXL (same channels serve the traffic)
+        assert abs(bal["tiered"] - bal["cxl"]) / bal["cxl"] < 0.1
+        # read-only: one busy direction — the tiers are near-flat
+        vals = sorted(ro.values())
+        assert vals[0] > 0 and (vals[-1] - vals[0]) / vals[0] < 0.1
+
+    def test_tier_speedup_counterfactual(self):
+        pool = _pool(tiers="ddr5:1,cxl:1", n=32, hbm=4)
+        _fill(pool, range(4), path="/t/mix")
+        pool.step(range(4, 8), hint_path="/t/mix")
+        _fill(pool, range(4, 8), path="/t/mix")
+        pool.step(range(4), hint_path="/t/mix")     # balanced round-trip
+        assert pool.tier_speedup() >= 1.4
+        # flat pools have no counterfactual
+        flat = PagedKVPool(16, 4, (8, 32))
+        _fill(flat, range(4), path="/serve/kv_cache")
+        flat.step(range(4, 8), hint_path="/serve/kv_cache")
+        assert flat.tier_speedup() == 1.0
+        assert flat.tier_stats() == {"tiered": False}
+
+
+class TestMigrations:
+    def _mismatch_pool(self):
+        """Blocks 0..3 spilled dirty under the mixed scope (-> CXL),
+        then re-read under the read-mostly scope so their preference
+        flips to DDR5 — migration candidates."""
+        pool = _pool(n=24, hbm=4)
+        _fill(pool, range(4), path="/t/mix")
+        pool.step(range(4, 8), hint_path="/t/mix")       # 0..3 -> cxl
+        pool.step([0, 1], hint_path="/t/read")           # pref -> ddr5
+        assert all(_kind_of(pool, b) == "cxl" for b in (0, 1))
+        return pool
+
+    def test_balanced_window_blocks_migration(self):
+        """A balanced CXL window has no idle minor direction: nothing
+        may ride it (the budget is leftover capacity, not free DMA)."""
+        pool = self._mismatch_pool()
+        pool.migrate_tiers()                             # close window
+        # balanced window: 2,3 page in while the rewritten 0,1 (and the
+        # whole resident set) page out
+        _fill(pool, [0, 1], path="/t/mix")
+        pool.step([2, 3, 8, 9], hint_path="/t/mix")
+        pool.host.pref[[0, 1]] = pool.host._kind_id["ddr5"]
+        win = pool.host._win.copy()
+        assert (win.sum(axis=0) > 0).all()               # both directions
+        assert pool.migrate_tiers()["migrations"] == 0
+
+    def test_write_major_window_demotes_bit_exact(self):
+        # the mismatch window is write-major (the 0..3 spill outweighs
+        # the 0,1 re-read), so the CXL read direction has idle capacity
+        # for the demotion's source leg at the very next boundary.
+        pool = self._mismatch_pool()
+        m = pool.migrate_tiers()
+        assert m["migrations"] >= 1
+        assert _kind_of(pool, 0) == "ddr5"
+        assert pool.stats["migrate_us"] > 0              # the DDR5 leg
+        pool.check_invariants()
+        # the moved host copy is bit-exact through its new slot
+        pool.step([0], hint_path="/t/read")
+        got = np.asarray(pool.read([0])[0], np.float32)
+        want = np.asarray(_data(0), np.float32)
+        amax = np.abs(want).max()
+        assert np.abs(got - want).max() <= amax / 127.0 + 0.02
+
+    def test_idle_cxl_link_absorbs_promotions(self):
+        """Blocks spilled under a read scope (-> DDR5) whose scope turns
+        mixed promote INTO the idle CXL link while DDR5 carries the
+        window's traffic."""
+        pool = _pool(n=24, hbm=4)
+        _fill(pool, range(4), path="/t/read")
+        pool.step(range(4, 8), hint_path="/t/read")      # 0..3 -> ddr5
+        pool.migrate_tiers()
+        pool.step([0, 1], hint_path="/t/mix")            # pref -> cxl;
+        assert all(_kind_of(pool, b) == "ddr5" for b in (0, 1))
+        m = pool.migrate_tiers()                         # ddr5-read window
+        assert m["migrations"] >= 1
+        assert _kind_of(pool, 0) == "cxl"
+        pool.check_invariants()
+
+    def test_migration_is_dispatch_only(self):
+        """Planning + the row copy perform zero device->host syncs."""
+        warm = self._mismatch_pool()                     # compile path
+        assert warm.migrate_tiers()["migrations"] >= 1
+
+        pool = self._mismatch_pool()
+        with jax.transfer_guard_device_to_host("disallow"):
+            m = pool.migrate_tiers()
+        assert m["migrations"] >= 1
+        pool.check_invariants()
+
+    def test_migration_disabled_leaves_placement(self):
+        pool = self._mismatch_pool()
+        assert pool.migrate_tiers(max_moves=0)["migrations"] == 0
+        assert all(_kind_of(pool, b) == "cxl" for b in (0, 1))
+
+    def test_cross_scope_eviction_keeps_owner_preference(self):
+        """Victims are picked jointly across scopes, so another scope's
+        demand may evict a block it does not own: the eviction must not
+        clobber the owner's tier preference, or the misplaced block
+        would never migrate home."""
+        pool = _pool(n=24, hbm=4)
+        _fill(pool, range(4), path="/t/read")
+        pool.step(range(4, 8), hint_path="/t/read")      # spill -> ddr5
+        ddr5 = pool.host._kind_id["ddr5"]
+        assert (pool.host.pref[:4] == ddr5).all()
+        # the owner re-reads and rewrites its blocks, then a MIXED
+        # scope's demand evicts them
+        _fill(pool, range(4), path="/t/read")
+        pool.step(range(4, 8), hint_path="/t/mix")
+        assert (pool.host.pref[:4] == ddr5).all()        # owner pref kept
+        assert all(_kind_of(pool, b) == "ddr5" for b in range(4))
+
+    def test_plan_records_migrate_transfers_and_abandon(self):
+        from repro.core import offload as offload_lib
+        pool = self._mismatch_pool()
+        plan = pool.host.plan_migrations(pool.last_use, pool._has_host,
+                                         4)
+        assert len(plan) >= 1
+        assert all(t.direction == offload_lib.MIGRATE
+                   for t in plan.transfers)
+        assert [t.src_block for t in plan.transfers] == \
+            plan.src_slots.tolist()
+        assert [t.dst_block for t in plan.transfers] == \
+            plan.dst_slots.tolist()
+        # abandon hands the reserved destination slots back
+        pool.host.abandon(plan)
+        pool.host.check_invariants()
+        free = sum(len(f) for f in pool.host._free)
+        placed = int((pool.host.slot_of >= 0).sum())
+        assert free + placed == pool.host.total_slots
+
+
+@pytest.fixture(scope="module")
+def api():
+    return R.build("smollm-135m", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params(api):
+    return api.init(jax.random.PRNGKey(0))
+
+
+def _engine_cfg(**kw):
+    base = dict(max_batch=3, cache_len=64, block_tokens=4, hbm_blocks=10,
+                pool_blocks=64, prefill_chunk=3, max_queue=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _serve(api, params, **kw):
+    """A mixed LLM + KV-store run: the tenant's GET/SET checksum reads
+    the pool's real paged data, so any migration corruption changes the
+    result."""
+    eng = ServeEngine(api, params, _engine_cfg(**kw))
+    kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                      store_blocks=12))
+    kv.preload(12)
+    kv.submit("gaussian", n_steps=24)
+    kv.submit("read_heavy", n_steps=24, arrival_step=4)
+    prompts = jax.random.randint(jax.random.PRNGKey(31), (4, 6), 0,
+                                 api.cfg.vocab)
+    rids = [eng.submit(np.asarray(prompts[i]), 10,
+                       arrival_step=2 * i).rid for i in range(4)]
+    outs = eng.run(max_steps=400)
+    eng.pool.check_invariants()
+    return ([outs[r].tolist() for r in rids], kv.result(),
+            eng.paging_stats())
+
+
+class TestEngineIntegration:
+    @pytest.mark.parametrize("megastep", [1, 4, 8])
+    def test_served_results_bit_exact_across_tiering(self, api, params,
+                                                     megastep):
+        """Acceptance: tokens AND tenant checksums are bit-identical
+        between the flat pool, the tiered pool, and the tiered pool with
+        migrations disabled, at every megastep width."""
+        flat = _serve(api, params, megastep=megastep)
+        tiered = _serve(api, params, megastep=megastep,
+                        tiers="ddr5:1,cxl:1")
+        frozen = _serve(api, params, megastep=megastep,
+                        tiers="ddr5:1,cxl:1", tier_migrate=False)
+        assert flat[0] == tiered[0] == frozen[0]
+        assert flat[1] == tiered[1] == frozen[1]
+        assert tiered[2]["tiers"]["tiered"] is True
+        assert "tiers" not in flat[2]
+
+    def test_tiered_stats_reported(self, api, params):
+        _, _, st = _serve(api, params, megastep=4, tiers="ddr5:2,cxl:2")
+        tiers = st["tiers"]
+        assert set(tiers["channels"]) == {"ddr5:0", "ddr5:1", "cxl:2",
+                                          "cxl:3"}
+        moved = sum(c["page_in_blocks"] + c["page_out_blocks"]
+                    for c in tiers["channels"].values())
+        assert moved == st["page_ins"] + st["page_outs"]
+        assert st["tier_speedup"] == pytest.approx(
+            tiers["tier_speedup"], abs=1e-4)
+        assert st["tier_speedup"] > 1.0
+
+    def test_one_sync_per_tiered_megastep(self, api, params):
+        """A tiered megastep — paging, staged write-through, boundary
+        migration planning and the migration row copy — still performs
+        exactly ONE device->host transfer: the packed readback."""
+        cfg = _engine_cfg(megastep=4, tiers="ddr5:1,cxl:1")
+        eng = ServeEngine(api, params, cfg)
+        prompts = jax.random.randint(jax.random.PRNGKey(32), (3, 6), 0,
+                                     api.cfg.vocab)
+        for i in range(3):
+            eng.submit(np.asarray(prompts[i]), 20)
+        eng.megastep(4)          # compile everything outside the guard
+        syncs = []
+        orig = eng._readback
+
+        def guarded(packed):
+            syncs.append(np.asarray(packed).shape)
+            with jax.transfer_guard("allow"):
+                return orig(packed)
+
+        eng._readback = guarded
+        for _ in range(3):
+            n = len(syncs)
+            with jax.transfer_guard_device_to_host("disallow"):
+                report = eng.megastep(4)
+            assert len(syncs) == n + 1       # exactly the readback
+            assert "migrations" in report
+        eng.pool.check_invariants()
