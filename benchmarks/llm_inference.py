@@ -85,13 +85,18 @@ def run(smoke: bool = False) -> Bench:
     # REPRO_MEGASTEP picks the engine's steps-per-host-dispatch width:
     # the default 8 is the tentpole configuration ("llm" BENCH section);
     # CI additionally smokes 1 and 4 into their own sections so
-    # dispatch-tax regressions stay visible per width.
+    # dispatch-tax regressions stay visible per width. REPRO_PIPELINE
+    # picks the boundary pipeline depth (default 2 — double-buffered
+    # dispatch); when set explicitly the run lands in its own
+    # "llm_pipe<d>" section so CI can diff depth 2 against depth 1.
     megastep = int(os.environ.get("REPRO_MEGASTEP", "8"))
+    pipe_env = os.environ.get("REPRO_PIPELINE")
+    pipeline = int(pipe_env) if pipe_env else 2
     api_s = R.build("smollm-135m", smoke=True)
     params = api_s.init(jax.random.PRNGKey(0))
     ecfg = EngineConfig(max_batch=4, cache_len=64, block_tokens=4,
                         hbm_blocks=6, prefill_chunk=2, max_queue=8,
-                        megastep=megastep)
+                        megastep=megastep, pipeline_depth=pipeline)
 
     def _drive(eng: ServeEngine):
         key = jax.random.PRNGKey(1)
@@ -119,27 +124,48 @@ def run(smoke: bool = False) -> Bench:
     st = eng.paging_stats()
     tokens = sum(len(v) for v in outs.values())
     tok_s = tokens / dt
+    # gap-to-ceiling: the same fused megastep cell driven with zero host
+    # work between dispatches is the device-side roof; roofline_frac is
+    # the fraction of it the full serving loop (admission, planning,
+    # paging, readbacks) actually delivers — the number the pipelined
+    # dispatcher moves.
+    from benchmarks.roofline import serve_kernel_ceiling
+    ceiling = serve_kernel_ceiling(api_s, params, ecfg,
+                                   repeats=1 if smoke else 3)
+    frac = tok_s / ceiling if ceiling > 0 else 0.0
     b.row("decode/kv-paging", dt * 1e6,
-          f"steady {tok_s:.0f} tok/s (warmup {warm_dt:.2f}s); "
-          f"megastep={megastep}: {st['host_dispatches']} dispatches/"
-          f"{eng.step_count} steps; "
+          f"steady {tok_s:.0f} tok/s = {frac:.0%} of the "
+          f"{ceiling:.0f} tok/s kernel ceiling (warmup {warm_dt:.2f}s); "
+          f"megastep={megastep} pipeline={pipeline}: "
+          f"{st['host_dispatches']} dispatches/"
+          f"{eng.step_count} steps/{st['host_blocked']} blocked; "
           f"duplex_speedup={st['duplex_speedup']:.2f}x "
           f"({st['page_ins']} ins/{st['page_outs']} outs; "
           f"{st['kernel_calls']} kernel calls; "
           f"{tokens} tok served)", provenance=ENGINE)
 
     # the repo-root perf trajectory marker: "llm" section at the default
-    # megastep width, "llm_megastep<K>" for the CI dispatch-tax smokes
-    # (CI diffs each workload's section against the previous CI run and
-    # warns on >20% regression; host_dispatches rides along so a
-    # dispatch-tax regression is visible even when tokens/s noise
-    # hides it)
-    section = "llm" if megastep == 8 else f"llm_megastep{megastep}"
+    # megastep width, "llm_megastep<K>" for the CI dispatch-tax smokes,
+    # "llm_pipe<d>" when REPRO_PIPELINE pins the pipeline depth (the CI
+    # depth-2-vs-depth-1 A/B). CI diffs each workload's section against
+    # the previous CI run and warns on >20% regression; host_dispatches
+    # and host_blocked ride along so dispatch-tax and pipeline-bubble
+    # regressions stay visible even when tokens/s noise hides them.
+    if pipe_env is not None:
+        section = f"llm_pipe{pipeline}"
+    elif megastep != 8:
+        section = f"llm_megastep{megastep}"
+    else:
+        section = "llm"
     update_bench_json(section, {
         "tokens_per_s": round(tok_s, 1),
         "steps": int(eng.step_count),
         "megastep": megastep,
+        "pipeline_depth": pipeline,
         "host_dispatches": int(st["host_dispatches"]),
+        "host_blocked": int(st["host_blocked"]),
+        "kernel_ceiling_tok_s": round(ceiling, 1),
+        "roofline_frac": round(frac, 4),
         "duplex_speedup": round(st["duplex_speedup"], 4)})
 
     write_csv("fig6_llm.csv",

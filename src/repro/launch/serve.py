@@ -80,6 +80,14 @@ def main() -> int:
                         "run loop adapts K between admission events and "
                         "syncs the host once per megastep. 1 = classic "
                         "per-step loop")
+    p.add_argument("--pipeline-depth", type=int, default=2,
+                   help="megastep boundaries in flight: 2 (default) "
+                        "plans and dispatches megastep t+1 before "
+                        "consuming t's deferred readback, so host "
+                        "planning overlaps device compute; 1 = classic "
+                        "blocking boundary. Bit-exact either way; depth "
+                        "> 2 buys nothing under the single donation "
+                        "chain")
     p.add_argument("--policy", default="hinted",
                    help="admission policy (core.policies registry)")
     p.add_argument("--tiers", type=_tiers_arg, default=None,
@@ -122,7 +130,8 @@ def main() -> int:
         pool_blocks=args.pool_blocks, prefill_chunk=args.prefill_chunk,
         max_queue=max(args.requests, args.batch) + 8, policy=args.policy,
         paging=not args.no_paging, megastep=args.megastep,
-        tiers=args.tiers, tier_migrate=not args.no_tier_migrate)
+        tiers=args.tiers, tier_migrate=not args.no_tier_migrate,
+        pipeline_depth=args.pipeline_depth)
     if tenant_names and args.no_paging:
         p.error("tenants serve from the paged pool; drop --no-paging")
     if args.tiers and args.no_paging:
@@ -171,7 +180,9 @@ def main() -> int:
     est = engine.stats()
     print(f"served {args.requests} requests / {total_tokens} tokens in "
           f"{engine.step_count} steps / {est['host_dispatches']} host "
-          f"dispatches (megastep={args.megastep}), {dt:.2f}s "
+          f"dispatches / {est['host_blocked']} blocked boundaries "
+          f"(megastep={args.megastep}, "
+          f"pipeline={args.pipeline_depth}), {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s)")
     print(f"first request: admitted step {first.admitted_step}, done step "
           f"{first.done_step}, tokens {outs[rids[0]][:8].tolist()}...")
@@ -198,7 +209,9 @@ def main() -> int:
         "generated_tokens": int(total_tokens),
         "steps": int(engine.step_count),
         "megastep": args.megastep,
+        "pipeline_depth": args.pipeline_depth,
         "host_dispatches": int(est["host_dispatches"]),
+        "host_blocked": int(est["host_blocked"]),
         "wall_s": round(dt, 3),
         "tok_s": round(total_tokens / dt, 2),
         "paging": _round(engine.paging_stats()),

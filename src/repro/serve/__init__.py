@@ -24,7 +24,12 @@ The serving stack, layered (see README.md):
                   fused jitted LLM token program (device-resident slot
                   state, on-device argmax feedback, a single packed
                   completion readback — the step's only host sync), one
-                  merged paging transaction, tenant device compute.
+                  merged paging transaction, tenant device compute. K
+                  steps fuse into one megastep dispatch, and boundaries
+                  run double-buffered (``pipeline_depth=2``): megastep
+                  t+1 is planned and dispatched before t's deferred
+                  readback is reconciled, with journaled rollback of
+                  speculative pool mutations on divergence.
 """
 
 from repro.serve.engine import EngineConfig, ServeEngine, reference_decode

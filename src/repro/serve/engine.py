@@ -80,6 +80,33 @@ policy ``Feedback`` is folded in one scanned update
 the classic per-step loop (``step()`` *is* ``megastep(1)``), and
 ``run()`` picks the megastep width adaptively so admission still
 happens at exactly the steps the per-step loop would have used.
+
+Pipelined boundaries: ``cfg.pipeline_depth = 2`` splits each megastep
+into plan / dispatch / reconcile and keeps one dispatched megastep's
+packed readback *deferred* while the next boundary is planned and
+dispatched, so the device never drains between megasteps — XLA async
+dispatch chains megastep t+1's donated programs behind t's while the
+host does t+1's planning work. The enabler is the same determinism that
+makes megasteps possible: token *values* never steer control (greedy
+decode; completion counts from ``max_new_tokens``), so admission,
+paging, tier migrations and the policy fold for t+1 are all computable
+before t's readback lands. Planning reads the requests' *speculative*
+mirrors (``Request.plan_*`` — advanced at dispatch time from the
+trajectory; the real mirrors stay one boundary behind until the
+deferred ``sync_megastep``), every speculative pool alloc/free is
+journaled per in-flight megastep, and a readback that contradicts its
+trajectory rolls the journal back (no leaked or double-freed blocks)
+before raising. The sync budget is unchanged — still exactly one
+packed readback per megastep, just consumed one boundary late — and
+depth 2 is bit-exact with depth 1: same tokens, same admission steps,
+same paging transactions. Depth > 2 buys nothing here: there is a
+single donation chain (one cache, one slot-state tree), so a third
+in-flight megastep would just queue behind the second in XLA's stream —
+the host only ever needs one boundary of lookahead to stay off the
+critical path. ``stats()['host_blocked']`` counts the boundaries where
+the host consumed a readback with nothing dispatched ahead of it (the
+pipeline-bubble count: == megasteps at depth 1; 1 per run — the final
+drain — at depth 2).
 """
 
 from __future__ import annotations
@@ -114,6 +141,24 @@ class _RowStep:
     transition: bool    # was it the PREFILL->DECODE transition step?
 
 
+@dataclasses.dataclass
+class _InFlight:
+    """One dispatched-but-unreconciled megastep — the pipeline's unit of
+    speculation. ``_plan`` fills the deterministic fields, ``_dispatch``
+    attaches the in-flight packed readback plus a journal of the
+    speculative pool mutations (replayed backwards if the readback later
+    contradicts the trajectory), ``_reconcile`` consumes it."""
+    now: int            # first engine step covered by the megastep
+    k: int              # inner steps fused into the dispatch
+    admitted: int       # requests admitted at the boundary
+    live: list          # LLM rows live at dispatch time
+    traj: dict          # rid -> k predicted _RowSteps
+    packed: object = None               # (B, 3+K) device readback future
+    report: dict = dataclasses.field(default_factory=dict)
+    journal: list = dataclasses.field(default_factory=list)
+                        # ("alloc" | "free", request, [block ids])
+
+
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     max_batch: int = 4          # running decode slots
@@ -133,6 +178,11 @@ class EngineConfig:
                                 # ("ddr5:2,cxl:2"); None = flat pool
     tier_migrate: bool = True   # rebalance host placement at megastep
                                 # boundaries (tiered pools only)
+    pipeline_depth: int = 1     # megastep boundaries in flight: 1 = plan,
+                                # dispatch, block on the readback (classic
+                                # loop); 2 = double-buffered — plan and
+                                # dispatch t+1 before reconciling t's
+                                # deferred readback. Bit-exact either way.
 
     def resolved_pool_blocks(self) -> int:
         if self.pool_blocks:
@@ -397,6 +447,8 @@ class ServeEngine:
                 "cannot serve it")
         if cfg.megastep < 1:
             raise ValueError("megastep must be >= 1")
+        if cfg.pipeline_depth < 1:
+            raise ValueError("pipeline_depth must be >= 1")
         self.api = api
         self.params = params
         self.cfg = cfg
@@ -447,6 +499,16 @@ class ServeEngine:
         self.host_dispatches = 0   # fused step-program dispatches (the
                                    # per-token host round-trip tax)
         self.megasteps = 0         # megastep() invocations
+        self.host_blocked = 0      # boundaries whose readback the host
+                                   # consumed with nothing dispatched
+                                   # ahead of it — the pipeline-bubble
+                                   # count (== megasteps at depth 1; the
+                                   # single final drain at depth 2)
+        self._inflight: list[_InFlight] = []   # dispatched, unreconciled
+        # one reusable zero vector for the megastep Feedback rows — the
+        # boundary fold stacks (copies) its host leaves, so every zero
+        # row of every boundary can share this one buffer.
+        self._fb_zero = np.zeros((self.queue.capacity,), np.float32)
         self.completed: dict[int, Request] = {}
         self._scan_cursor: dict[int, int] = {}   # rid -> cold-block cursor
         # non-LLM tenants (WorkloadAPI) sharing the pool, the paging
@@ -544,23 +606,54 @@ class ServeEngine:
         The single device->host sync is the packed (B, 3+K) completion
         readback at the end. Admission, LLM retirement, and the policy
         fold all happen at the boundary.
+
+        This is the depth-1 composition of the pipelined dispatcher —
+        plan, dispatch, reconcile, in that order, blocking on this
+        boundary's readback before returning. ``run()`` at
+        ``pipeline_depth > 1`` interleaves the same three phases across
+        boundaries instead. Older in-flight megasteps (if any) are
+        reconciled first, in dispatch order.
         """
+        rec = self._dispatch(self._plan(n_steps))
+        while self._inflight[0] is not rec:
+            self._reconcile(self._inflight[0])
+        return self._reconcile(rec)
+
+    def _plan(self, n_steps: int | None = None) -> _InFlight:
+        """Boundary planning: admission plus every live row's K-step
+        trajectory — host-deterministic arithmetic over the *planning*
+        view of the request mirrors (``Request.plan_*``: identical to
+        the real mirrors at depth 1, one dispatched-but-unreconciled
+        boundary ahead of them at depth 2). No device sync."""
         k = int(n_steps) if n_steps else max(1, self.cfg.megastep)
         now = self.step_count
         admitted = self._admit(now)
         live = self.active()
-        packed = staged = None
-        traj: dict[int, list[_RowStep]] = {}
+        traj = {r.rid: self._simulate_row(r, k) for r in live}
+        return _InFlight(now=now, k=k, admitted=admitted, live=live,
+                         traj=traj)
+
+    def _dispatch(self, rec: _InFlight) -> _InFlight:
+        """Enqueue one planned megastep without consuming its readback:
+        the fused K-step program, the per-inner-step paging transactions
+        against its staged slabs, mid-megastep block frees, tenant
+        compute/retirement, boundary tier migrations, and the policy
+        fold. Dispatch-only — device work chains on donated buffers,
+        host state advances along the deterministic trajectory
+        (speculative mirrors, trajectory-driven retirement, step
+        counters), and every pool alloc/free is journaled on ``rec`` so
+        a later divergence can roll it back."""
+        now, k, live, traj = rec.now, rec.k, rec.live, rec.traj
+        staged = None
         if live:
-            traj = {r.rid: self._simulate_row(r, k) for r in live}
             out = self._mega_fn(k)(self.params, self.cache, self._dev)
             if self.paged:
-                self.cache, self._dev, packed, staged = out
+                self.cache, self._dev, rec.packed, staged = out
             else:
-                self.cache, self._dev, packed = out
+                self.cache, self._dev, rec.packed = out
             self.host_dispatches += 1
 
-        report = {"page_ins": 0, "page_outs": 0}
+        report = {"page_ins": 0, "page_outs": 0, "migrations": 0}
         feedbacks = []
         tenant_done = 0
         for t in range(k):
@@ -570,7 +663,8 @@ class ServeEngine:
                 if st.state != S_DONE:
                     rows.append((r, st))
             if self.paged:
-                rep = self._page_kv_at(now + t, rows, staged, t)
+                rep = self._page_kv_at(now + t, rows, staged, t,
+                                       rec.journal)
                 report["page_ins"] += rep["page_ins"]
                 report["page_outs"] += rep["page_outs"]
                 # rows completing at this inner step release their pool
@@ -585,16 +679,15 @@ class ServeEngine:
                                  or traj[r.rid][t - 1].state != S_DONE)):
                         self.pool.free(r.blocks)
                         r.blocks_freed = True
+                        rec.journal.append(("free", r, list(r.blocks)))
             for tn in self.tenants.values():
                 for r in tn.retire(now + t):
                     self.completed[r.rid] = r
                     tenant_done += 1
             if k > 1:
                 feedbacks.append(policies_lib.Feedback(
-                    moved_read=np.zeros((self.queue.capacity,),
-                                        np.float32),
-                    moved_write=np.zeros((self.queue.capacity,),
-                                         np.float32),
+                    moved_read=self._fb_zero,
+                    moved_write=self._fb_zero,
                     utilization=np.float32(
                         len(rows) / max(1, self.cfg.max_batch))))
 
@@ -602,36 +695,26 @@ class ServeEngine:
             # boundary tier rebalance: planned from this megastep's
             # per-channel traffic window (host metadata only), executed
             # as one dispatched row copy riding the CXL links' idle
-            # minor direction — before the readback below, so the move
-            # overlaps the still-in-flight compute.
+            # minor direction — before the readback is ever consumed, so
+            # the move overlaps the still-in-flight compute. Plans may
+            # cover planned-not-yet-reconciled residency; that is safe —
+            # moves relocate verbatim host bytes and a divergence
+            # rollback only needs ownership consistency, not placement
+            # restoration.
             report["migrations"] = self.pool.migrate_tiers()["migrations"]
 
-        advanced = 0
-        if live:
-            rb = self._readback(packed)
-            for r in live:
-                steps_r = traj[r.rid]
-                toks = [int(rb[r.slot, 3 + t])
-                        for t, st in enumerate(steps_r) if st.emitted]
-                c0, g0 = r.consumed, len(r.generated)
-                r.sync_megastep(int(rb[r.slot, 0]), int(rb[r.slot, 1]),
-                                int(rb[r.slot, 2]), toks)
-                last = steps_r[-1]
-                if (STATE_OF_CODE[last.state] != r.state
-                        or last.consumed != r.consumed):
-                    raise RuntimeError(
-                        f"rid {r.rid}: device state "
-                        f"({r.state}, consumed={r.consumed}) diverged "
-                        f"from the host trajectory "
-                        f"({STATE_OF_CODE[last.state]}, "
-                        f"consumed={last.consumed})")
-                advanced += ((last.consumed + last.n_gen) - (c0 + g0)
-                             - sum(st.transition for st in steps_r))
-                if r.state == DONE:
-                    r.done_step = now + next(
-                        t for t, st in enumerate(steps_r)
-                        if st.state == S_DONE)
-        completed = tenant_done + self._retire(now + k - 1)
+        # the megastep's outcome — bar token values — is already decided,
+        # so the planning view advances NOW: speculative mirrors jump to
+        # the trajectory's final step and predicted-DONE rows leave their
+        # slots (trajectory-driven retirement), letting the next _plan()
+        # admit into the post-megastep batch before this readback lands.
+        for r in live:
+            last = traj[r.rid][-1]
+            r.speculate(STATE_OF_CODE[last.state], last.consumed,
+                        last.n_gen)
+        report["completed"] = tenant_done + self._retire_planned(rec)
+        rec.report = report
+
         if feedbacks and len(self.queue):
             # megastep-boundary policy feedback: K per-step Feedbacks
             # folded through Policy.update as one scanned program, and
@@ -654,8 +737,7 @@ class ServeEngine:
             util = float(np.mean([float(fb.utilization)
                                   for fb in feedbacks]))
             zero = policies_lib.Feedback(
-                moved_read=np.zeros((self.queue.capacity,), np.float32),
-                moved_write=np.zeros((self.queue.capacity,), np.float32),
+                moved_read=self._fb_zero, moved_write=self._fb_zero,
                 utilization=np.float32(0.0))
             pad = max(0, max(1, self.cfg.megastep) - len(feedbacks))
             self.queue.note_service(
@@ -663,8 +745,101 @@ class ServeEngine:
                 mean_util=util)
         self.step_count += k
         self.megasteps += 1
-        return {"step": now, "steps": k, "admitted": admitted,
-                "advanced": advanced, "completed": completed, **report}
+        self._inflight.append(rec)
+        return rec
+
+    def _retire_planned(self, rec: _InFlight) -> int:
+        """Trajectory-driven LLM retirement at dispatch time: rows whose
+        predicted final state is DONE leave their slots before the
+        readback lands (their remaining inner steps are frozen on device;
+        the sampled values arrive with the deferred readback). The
+        completion step is deterministic, so this stamps the same
+        ``done_step`` the classic post-readback retirement did."""
+        n = 0
+        for r in rec.live:
+            steps_r = rec.traj[r.rid]
+            if steps_r[-1].state != S_DONE:
+                continue
+            r.done_step = rec.now + next(
+                t for t, st in enumerate(steps_r) if st.state == S_DONE)
+            if self.paged and r.blocks and not r.blocks_freed:
+                self.pool.free(r.blocks)
+                r.blocks_freed = True
+                rec.journal.append(("free", r, list(r.blocks)))
+            self._scan_cursor.pop(r.rid, None)
+            self.slots[r.slot] = None
+            self.completed[r.rid] = r
+            n += 1
+        return n
+
+    def _reconcile(self, rec: _InFlight) -> dict:
+        """Consume one in-flight megastep's deferred packed readback:
+        append the sampled token values to the real host mirrors,
+        cross-check the device's final counters against the dispatched
+        trajectory, and surface the boundary report. At depth 1 this
+        runs right after its own dispatch (the classic blocking loop);
+        at depth 2 it runs one boundary late, with t+1 already in
+        flight. A readback that contradicts its trajectory rolls back
+        every speculative pool mutation before raising."""
+        self._inflight.remove(rec)
+        if rec.live and not self._inflight:
+            # the host blocks on this readback with nothing dispatched
+            # ahead of it — a pipeline bubble.
+            self.host_blocked += 1
+        advanced = 0
+        if rec.live:
+            rb = self._readback(rec.packed)
+            try:
+                for r in rec.live:
+                    steps_r = rec.traj[r.rid]
+                    toks = [int(rb[r.slot, 3 + t])
+                            for t, st in enumerate(steps_r) if st.emitted]
+                    c0, g0 = r.consumed, len(r.generated)
+                    r.sync_megastep(int(rb[r.slot, 0]),
+                                    int(rb[r.slot, 1]),
+                                    int(rb[r.slot, 2]), toks)
+                    last = steps_r[-1]
+                    if (STATE_OF_CODE[last.state] != r.state
+                            or last.consumed != r.consumed):
+                        raise RuntimeError(
+                            f"rid {r.rid}: device state "
+                            f"({r.state}, consumed={r.consumed}) diverged "
+                            f"from the host trajectory "
+                            f"({STATE_OF_CODE[last.state]}, "
+                            f"consumed={last.consumed})")
+                    advanced += ((last.consumed + last.n_gen) - (c0 + g0)
+                                 - sum(st.transition for st in steps_r))
+            except RuntimeError:
+                self._rollback_speculation(rec)
+                raise
+        return {"step": rec.now, "steps": rec.k,
+                "admitted": rec.admitted, "advanced": advanced,
+                **rec.report}
+
+    def _rollback_speculation(self, failed: _InFlight) -> None:
+        """Divergence escape hatch: the device contradicted a dispatched
+        trajectory, so every pool mutation made for not-yet-reconciled
+        megasteps (the failed one and anything dispatched after it) is
+        speculative garbage. Replay the journals backwards — newest
+        boundary first, newest op first — to restore consistent block
+        ownership: speculative allocs are freed again (and dropped from
+        their request's tail — allocation order makes them the tail),
+        speculative frees are reclaimed (ownership returns; the data
+        round-trips already spent stay spent). The protected invariant
+        is *ownership*, not bytes — no block leaks, none double-frees,
+        and ``PagedKVPool.check_invariants()`` holds on exit; the engine
+        itself is poisoned and the caller's RuntimeError propagates."""
+        recs = [failed] + self._inflight
+        self._inflight = []
+        for rec in reversed(recs):
+            for op, req, ids in reversed(rec.journal):
+                if op == "alloc":
+                    del req.blocks[len(req.blocks) - len(ids):]
+                    self.pool.free(ids)
+                else:
+                    self.pool.reclaim(ids)
+                    req.blocks_freed = False
+            rec.journal = []
 
     def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
         """Drive megasteps until every submitted request completes.
@@ -676,15 +851,27 @@ class ServeEngine:
         host-deterministic), so admission happens at exactly the steps
         the K=1 loop would have used while the host dispatches once per
         gap. ``stats()`` reports ``host_dispatches`` next to ``steps`` —
-        the dispatch-tax ratio this loop exists to shrink."""
+        the dispatch-tax ratio this loop exists to shrink.
+
+        With ``cfg.pipeline_depth > 1`` the loop double-buffers the
+        boundaries: it plans and dispatches megastep t+1 *before*
+        reconciling t's deferred readback, so the host's planning work
+        overlaps the device's still-in-flight compute and only the final
+        drain blocks with nothing dispatched ahead (``host_blocked``
+        counts those bubbles). Results are bit-exact across depths."""
         limit = max_steps if max_steps is not None else 10_000
+        depth = max(1, self.cfg.pipeline_depth)
         done_steps = 0
         while done_steps < limit:
             if not self.pending():
                 break
             k = self._auto_megastep(limit - done_steps)
-            self.megastep(k)
+            self._dispatch(self._plan(k))
             done_steps += k
+            while len(self._inflight) >= depth:
+                self._reconcile(self._inflight[0])
+        while self._inflight:
+            self._reconcile(self._inflight[0])
         if self.pending():
             stuck = sorted(
                 [r.rid for r in self.queue.waiting()]
@@ -707,11 +894,13 @@ class ServeEngine:
         step and emits once on its transition micro-step; a DECODE row
         emits exactly one token per step; DONE rows freeze. The megastep
         path plans all K paging transactions from this and uses the
-        readback only for token values (divergence raises)."""
+        readback only for token values (divergence raises). Reads the
+        planning view (``plan_*``) so a pipelined boundary simulates
+        from the dispatched-but-unreconciled predecessor's end state."""
         n_micro = max(1, self.cfg.prefill_chunk)
         state = {PREFILL: S_PREFILL, DECODE: S_DECODE,
-                 DONE: S_DONE}[r.state]
-        consumed, n_gen = r.consumed, len(r.generated)
+                 DONE: S_DONE}[r.plan_state]
+        consumed, n_gen = r.plan_consumed, r.plan_n_gen
         plen, mnew = r.prompt_len, r.max_new_tokens
         out = []
         for _ in range(k):
@@ -735,23 +924,24 @@ class ServeEngine:
         return out
 
     def _steps_until_done(self, r: Request) -> int:
-        """Engine steps until this live row completes (deterministic)."""
-        if r.state == DONE:
+        """Engine steps until this live row completes (deterministic;
+        planning view)."""
+        if r.plan_state == DONE:
             return 0
         n = 0
-        if r.state == PREFILL:
+        if r.plan_state == PREFILL:
             n = self._steps_until_decode(r)
-            gen_left = r.max_new_tokens - len(r.generated) - 1
+            gen_left = r.max_new_tokens - r.plan_n_gen - 1
         else:
-            gen_left = r.max_new_tokens - len(r.generated)
+            gen_left = r.max_new_tokens - r.plan_n_gen
         return max(1, n + gen_left)
 
     def _steps_until_decode(self, r: Request) -> int:
         """Steps until a prefilling row's PREFILL->DECODE transition."""
-        if r.state != PREFILL:
+        if r.plan_state != PREFILL:
             return 0
         n_micro = max(1, self.cfg.prefill_chunk)
-        return max(1, -(-(r.prompt_len - r.consumed) // n_micro))
+        return max(1, -(-(r.prompt_len - r.plan_consumed) // n_micro))
 
     def _auto_megastep(self, remaining: int) -> int:
         """Widest safe megastep from the current boundary: never skip a
@@ -772,7 +962,7 @@ class ServeEngine:
             evs = []
             for r in live:
                 evs.append(self._steps_until_done(r))
-                if r.state == PREFILL:
+                if r.plan_state == PREFILL:
                     evs.append(self._steps_until_decode(r))
             for tn in self.tenants.values():
                 for tr in tn.running():
@@ -816,7 +1006,7 @@ class ServeEngine:
             return n_free
         running = sum(
             self._worst_step_blocks(r.prompt_len, r.max_new_tokens,
-                                    r.state == PREFILL)
+                                    r.plan_state == PREFILL)
             for r in self.active())
         headroom = (self.pool.hbm_capacity - self._reserved_blocks
                     - running)
@@ -890,14 +1080,15 @@ class ServeEngine:
 
     # -- batched KV paging (all tenants, one transaction per inner step) ----
     def _page_kv_at(self, now: int, rows: "list[tuple[Request, _RowStep]]",
-                    staged, t: int) -> dict:
+                    staged, t: int, journal: list) -> dict:
         """One paging transaction for inner step ``t`` of a megastep:
         LLM KV traffic (planned from the host-deterministic trajectory,
         written through from the megastep program's staged slab) plus
         every tenant's block demand, grouped by hint scope, through a
         single ``PagedKVPool.step_multi`` call; then each tenant's device
         compute against the resident blocks. Dispatch-only — nothing here
-        waits on the device."""
+        waits on the device. Every alloc is recorded in the dispatching
+        megastep's ``journal`` so a divergence can roll it back."""
         bt = self.cfg.block_tokens
         new_pairs: list[tuple[Request, int, int]] = []  # (req, bi, stage_j)
         for r, st in rows:
@@ -909,6 +1100,7 @@ class ServeEngine:
             while len(r.blocks) < n_filled:
                 bi = len(r.blocks)
                 r.blocks.extend(self.pool.alloc(1))
+                journal.append(("alloc", r, [r.blocks[bi]]))
                 new_pairs.append((r, bi, bi - fill_base))
 
         # tenant demand first: it is bounded by the per-tenant
@@ -1000,32 +1192,20 @@ class ServeEngine:
                 c = self._scan_cursor.get(r.rid, 0) % n
                 self._scan_cursor[r.rid] = (c + k) % n
 
-    # -- completion (LLM rows; tenants retire per inner step) ----------------
-    def _retire(self, now: int) -> int:
-        n = 0
-        for i, r in enumerate(self.slots):
-            if r is not None and r.state == DONE:
-                if r.done_step < 0:
-                    r.done_step = now
-                if self.paged and r.blocks and not r.blocks_freed:
-                    self.pool.free(r.blocks)
-                    r.blocks_freed = True
-                self._scan_cursor.pop(r.rid, None)
-                self.slots[i] = None
-                self.completed[r.rid] = r
-                n += 1
-        return n
-
     # -- reporting -----------------------------------------------------------
     def stats(self) -> dict:
         """Dispatch accounting: ``steps`` (engine steps run),
         ``host_dispatches`` (fused step-program launches — the per-token
-        host round-trip tax megasteps amortize) and ``megasteps``
-        (boundary count). steps / host_dispatches is the realized
+        host round-trip tax megasteps amortize), ``megasteps`` (boundary
+        count) and ``host_blocked`` (boundaries whose readback the host
+        consumed with nothing dispatched ahead of it — the
+        pipeline-bubble count the depth-2 dispatcher shrinks to the
+        single final drain). steps / host_dispatches is the realized
         megastep width."""
         return {"steps": self.step_count,
                 "host_dispatches": self.host_dispatches,
-                "megasteps": self.megasteps}
+                "megasteps": self.megasteps,
+                "host_blocked": self.host_blocked}
 
     def paging_stats(self) -> dict:
         if not self.paged:

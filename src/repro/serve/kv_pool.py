@@ -224,6 +224,27 @@ class PagedKVPool:
         # a reused id must not inherit the old request's recency clock
         self.last_use[blocks] = 0
 
+    def reclaim(self, blocks) -> None:
+        """Undo a speculative ``free`` (the engine's pipelined-dispatch
+        divergence rollback): re-mark the blocks allocated so ownership
+        returns to their request and a later cleanup ``free`` is not a
+        double-free. Residency, host copies and recency were dropped by
+        the free and are *not* restored — the blocks come back cold,
+        exactly like a fresh ``alloc`` — which keeps every block-table
+        invariant intact without replaying data movement. Raises if any
+        block was re-allocated in the meantime: the rollback replays
+        journals newest-op-first, so hitting one means the journal is
+        corrupt, not that the caller raced."""
+        blocks = np.asarray(blocks, np.int32).reshape(-1)
+        if blocks.size == 0:
+            return
+        taken = blocks[self._allocated[blocks]]
+        if taken.size:
+            raise RuntimeError(
+                f"reclaim of blocks {taken.tolist()} that are already "
+                f"allocated — speculative-free journal out of order")
+        self._allocated[blocks] = True
+
     def invalidate(self, blocks) -> None:
         """Declare full-block overwrites: the caller rewrites these blocks
         entirely this step (a batched whole-value SET), so a non-resident

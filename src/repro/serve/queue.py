@@ -76,6 +76,14 @@ class Request:
     state: str = WAITING
     consumed: int = 0                   # prompt tokens fed so far
     generated: list = dataclasses.field(default_factory=list)
+    #: speculative (state, consumed, n_gen) mirror — set at *dispatch*
+    #: time from the host-deterministic trajectory when the engine
+    #: pipelines megasteps (pipeline_depth > 1), so planning for
+    #: megastep t+1 reads the post-t view while t's packed readback is
+    #: still in flight. The real mirror fields above stay one boundary
+    #: behind until ``sync_megastep`` consumes the deferred readback;
+    #: the spec clears itself once the real mirror catches up.
+    spec: tuple | None = None
     blocks: list = dataclasses.field(default_factory=list)  # pool block ids
     blocks_freed: bool = False          # pool blocks already released
                                         # (mid-megastep retirement)
@@ -133,6 +141,34 @@ class Request:
                 f"rid {self.rid}: device reports {int(n_gen)} generated "
                 f"tokens after the megastep but the host trajectory "
                 f"yields {len(self.generated)} — mirrors out of sync")
+        if self.spec == (self.state, self.consumed, len(self.generated)):
+            # the deferred readback caught the real mirror up to the last
+            # dispatched boundary — drop the speculative view.
+            self.spec = None
+
+    # -- speculative planning view (pipelined megasteps) -------------------
+    def speculate(self, state: str, consumed: int, n_gen: int) -> None:
+        """Advance the *planning* view of this request to its predicted
+        post-megastep state at dispatch time (host-deterministic; only
+        token values are unknown). ``plan_*`` below is what the engine's
+        planning code (trajectories, admission budget, auto-megastep)
+        reads, so a depth-2 pipeline plans t+1 from the post-t view while
+        t's readback is still in flight. Depth-1 never speculates and the
+        properties fall through to the real mirror."""
+        self.spec = (state, int(consumed), int(n_gen))
+
+    @property
+    def plan_state(self) -> str:
+        return self.spec[0] if self.spec is not None else self.state
+
+    @property
+    def plan_consumed(self) -> int:
+        return self.spec[1] if self.spec is not None else self.consumed
+
+    @property
+    def plan_n_gen(self) -> int:
+        return (self.spec[2] if self.spec is not None
+                else len(self.generated))
 
 
 @functools.lru_cache(maxsize=32)

@@ -341,6 +341,17 @@ class TieredHostPool:
         less — migrations consume only that leftover, adding zero
         modelled time on the duplex links. Half-duplex legs are billed
         into ``migrate_us``. The window resets when the plan is applied.
+
+        Pipelined boundaries plan against *planned-not-yet-reconciled*
+        residency: with ``pipeline_depth > 1`` the engine calls this
+        while the previous megastep's readback is still in flight, so
+        ``movable`` may include blocks whose host copy was written by a
+        speculatively dispatched eviction. That is safe — moves relocate
+        verbatim host bytes between channel slots and never touch the
+        ``_has_host``/ownership bits the divergence rollback depends on,
+        so a rolled-back boundary leaves placement consistent (the
+        rollback restores ownership, not placement; see
+        ``PagedKVPool.reclaim``).
         """
         empty = MigrationPlan(np.zeros((0,), np.int32),
                               np.zeros((0,), np.int32),

@@ -169,9 +169,13 @@ class TestMegastepPerfContract:
         eng.submit(np.ones(5, np.int32), 16)
         eng.run(max_steps=200)
         st = eng.stats()
-        assert set(st) == {"steps", "host_dispatches", "megasteps"}
+        assert set(st) == {"steps", "host_dispatches", "megasteps",
+                           "host_blocked"}
         assert st["host_dispatches"] <= -(-st["steps"] // 2)
         assert st["host_dispatches"] == st["megasteps"]  # always live here
+        # depth-1 blocks on every boundary's readback — the bubble count
+        # the pipelined dispatcher exists to shrink
+        assert st["host_blocked"] == st["megasteps"]
         # the stats ride along in paging_stats for reporting
         assert eng.paging_stats()["host_dispatches"] == \
             st["host_dispatches"]

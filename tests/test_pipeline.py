@@ -1,0 +1,249 @@
+"""Pipelined (double-buffered) megastep dispatcher tests.
+
+Depth-2 contract: ``run()`` plans and dispatches megastep t+1 *before*
+reconciling t's deferred packed readback. That must be bit-exact with
+the classic depth-1 loop — same served tokens, same admission and
+completion steps, same paging traffic — because everything except the
+sampled token values is host-deterministic counter arithmetic. The sync
+budget is unchanged (exactly one packed readback per megastep, consumed
+one boundary late), and a readback that contradicts its dispatched
+trajectory rolls every speculative pool mutation back — no leaked or
+double-freed blocks — before raising.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.models import registry as R
+from repro.serve import (EngineConfig, KVStoreTenant, ServeEngine,
+                         reference_decode)
+
+
+@pytest.fixture(scope="module")
+def api():
+    return R.build("smollm-135m", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params(api):
+    return api.init(jax.random.PRNGKey(0))
+
+
+def _cfg(**kw):
+    base = dict(max_batch=3, cache_len=64, block_tokens=4, hbm_blocks=6,
+                prefill_chunk=3, max_queue=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _drive(api, params, depth, megastep, *, n=5, gen=8, **cfg_kw):
+    eng = ServeEngine(api, params, _cfg(megastep=megastep,
+                                        pipeline_depth=depth, **cfg_kw))
+    prompts = jax.random.randint(jax.random.PRNGKey(31), (n, 6), 0,
+                                 api.cfg.vocab)
+    reqs = [eng.submit(np.asarray(prompts[i]), gen, arrival_step=2 * i)
+            for i in range(n)]
+    outs = eng.run(max_steps=400)
+    toks = [np.asarray(outs[r.rid]) for r in reqs]
+    timing = [(r.admitted_step, r.done_step) for r in reqs]
+    return toks, timing, eng
+
+
+class TestPipelineBitExactness:
+    @pytest.mark.parametrize("megastep", [1, 4, 8])
+    def test_ring_exact_across_depths(self, api, params, megastep):
+        """Acceptance: depth 2 serves token-for-token what depth 1
+        serves, with identical admission/completion steps and identical
+        paging traffic, at every megastep width."""
+        t1, s1, e1 = _drive(api, params, 1, megastep)
+        t2, s2, e2 = _drive(api, params, 2, megastep)
+        for a, b in zip(t1, t2):
+            np.testing.assert_array_equal(a, b)
+        assert s1 == s2
+        p1, p2 = e1.paging_stats(), e2.paging_stats()
+        assert (p1["page_ins"], p1["page_outs"]) == \
+            (p2["page_ins"], p2["page_outs"])
+        assert e1.stats()["host_dispatches"] == \
+            e2.stats()["host_dispatches"]
+        # the bubble count is the whole point: depth 1 blocks on every
+        # boundary, depth 2 only on the final drain.
+        assert e1.host_blocked == e1.megasteps
+        assert e2.host_blocked == 1
+
+    @pytest.mark.parametrize("arch", ["rwkv6-7b", "zamba2-7b"])
+    def test_recurrent_exact_across_depths(self, arch):
+        """Recurrent cache families (RWKV wkv/shift state, hybrid Mamba
+        state) ride the same pipelined dispatcher — and still match the
+        static reference."""
+        api = R.build(arch, smoke=True)
+        params = api.init(jax.random.PRNGKey(9))
+        prompts = [np.asarray(jax.random.randint(
+            jax.random.PRNGKey(40 + i), (nn,), 0, api.cfg.vocab),
+            np.int32) for i, nn in enumerate([3, 7, 5])]
+        refs = [np.asarray(reference_decode(
+            api, params, np.asarray(p)[None], 6, cache_len=32))[0]
+            for p in prompts]
+
+        outs = {}
+        for depth in (1, 2):
+            eng = ServeEngine(api, params, EngineConfig(
+                max_batch=2, cache_len=32, prefill_chunk=3, megastep=4,
+                pipeline_depth=depth))
+            assert not eng.paged
+            rids = [eng.submit(p, 6, arrival_step=2 * i).rid
+                    for i, p in enumerate(prompts)]
+            got = eng.run(max_steps=200)
+            outs[depth] = [got[r] for r in rids]
+        for d1, d2, ref in zip(outs[1], outs[2], refs):
+            np.testing.assert_array_equal(d1, ref)
+            np.testing.assert_array_equal(d1, d2)
+
+    def test_mixed_tenants_exact_across_depths(self, api, params):
+        """LLM decode plus a KV-store tenant on the shared pool: depth 2
+        must reproduce depth 1's tokens, tenant checksum, op count and
+        per-request timing — the tenant's per-step compute/retire also
+        runs speculatively at dispatch time."""
+        results = {}
+        for depth in (1, 2):
+            eng = ServeEngine(api, params, EngineConfig(
+                max_batch=2, cache_len=64, block_tokens=4, hbm_blocks=14,
+                pool_blocks=96, prefill_chunk=2, max_queue=16,
+                megastep=4, pipeline_depth=depth))
+            kv = eng.add_tenant(KVStoreTenant(n_slots=2, ops_per_step=2,
+                                              store_blocks=16))
+            kv_reqs = [kv.submit("gaussian", n_steps=30)
+                       for _ in range(2)]
+            prompts = jax.random.randint(jax.random.PRNGKey(33), (3, 6),
+                                         0, api.cfg.vocab)
+            llm_reqs = [eng.submit(np.asarray(prompts[i]), 8,
+                                   arrival_step=i) for i in range(3)]
+            eng.run(max_steps=300)
+            results[depth] = (
+                [tuple(eng.completed[r.rid].generated)
+                 for r in llm_reqs],
+                [(r.admitted_step, r.done_step)
+                 for r in llm_reqs + kv_reqs],
+                kv.ops_done, kv.result())
+        assert results[1] == results[2]
+
+
+class TestPipelineSyncBudget:
+    def test_one_deferred_sync_per_megastep(self, api, params):
+        """Depth 2 keeps the megastep sync contract — exactly one packed
+        device->host readback per megastep — it just consumes it one
+        boundary late: two dispatches may be in flight with zero syncs
+        performed, and only the reconcile of each boundary transfers."""
+        eng = ServeEngine(api, params, _cfg(megastep=4,
+                                            pipeline_depth=2))
+        prompts = jax.random.randint(jax.random.PRNGKey(24), (3, 6), 0,
+                                     api.cfg.vocab)
+        for i in range(3):
+            eng.submit(np.asarray(prompts[i]), 24)
+        eng.megastep(4)      # compile everything outside the guard
+        blocked0 = eng.host_blocked
+        syncs = []
+        orig = eng._readback
+
+        def guarded(packed):
+            syncs.append(np.asarray(packed).shape)
+            with jax.transfer_guard("allow"):
+                return orig(packed)
+
+        eng._readback = guarded
+        with jax.transfer_guard_device_to_host("disallow"):
+            rec0 = eng._dispatch(eng._plan(4))
+            rec1 = eng._dispatch(eng._plan(4))
+            # both boundaries planned, dispatched, paged, retired —
+            # without consuming either readback.
+            assert syncs == []
+            assert len(eng._inflight) == 2
+            r0 = eng._reconcile(rec0)
+            assert len(syncs) == 1
+            r1 = eng._reconcile(rec1)
+            assert len(syncs) == 2
+        assert r0["steps"] == r1["steps"] == 4
+        # each readback is one packed (B, 3+K) array
+        assert all(s == (eng.cfg.max_batch, 3 + 4) for s in syncs)
+        # rec0's reconcile had rec1 in flight behind it — not a bubble;
+        # rec1's did not — the one drain bubble.
+        assert eng.host_blocked == blocked0 + 1
+
+    def test_run_host_blocked_accounting(self, api, params):
+        """host_blocked == megasteps at depth 1 (every boundary stalls);
+        == 1 at depth 2 (only the final drain)."""
+        for depth, expect_drain in ((1, False), (2, True)):
+            _, _, eng = _drive(api, params, depth, 4)
+            st = eng.stats()
+            assert st["host_blocked"] == (1 if expect_drain
+                                          else st["megasteps"])
+
+
+class TestDivergenceRollback:
+    def test_rollback_restores_pool_ownership(self, api, params):
+        """A readback contradicting its dispatched trajectory raises —
+        after replaying back every speculative pool alloc/free of the
+        not-yet-reconciled boundaries: no leaked blocks, no double
+        frees, block-table invariants clean."""
+        eng = ServeEngine(api, params, _cfg(megastep=4,
+                                            pipeline_depth=2))
+        prompts = jax.random.randint(jax.random.PRNGKey(35), (3, 8), 0,
+                                     api.cfg.vocab)
+        for i in range(3):
+            eng.submit(np.asarray(prompts[i]), 16)
+        eng.megastep(4)      # admit + settle into decode
+
+        rec0 = eng._dispatch(eng._plan(4))
+        assert rec0.journal, "test needs speculative pool mutations"
+        # corrupt one row's predicted end state: the device will
+        # (correctly) disagree, which models a real divergence.
+        steps = next(iter(rec0.traj.values()))
+        steps[-1] = dataclasses.replace(steps[-1],
+                                        consumed=steps[-1].consumed + 1)
+        eng._dispatch(eng._plan(4))     # a second speculative boundary
+        with pytest.raises(RuntimeError, match="diverged"):
+            eng._reconcile(eng._inflight[0])
+
+        assert eng._inflight == []      # journals consumed by rollback
+        eng.pool.check_invariants()
+        # ownership exactly matches the request mirrors: every block of
+        # every request that still owns blocks is allocated, nothing
+        # else is (nothing leaked, nothing double-freed).
+        owned = set()
+        for r in list(eng.slots) + list(eng.completed.values()):
+            if r is not None and not r.blocks_freed:
+                owned.update(r.blocks)
+        assert set(np.flatnonzero(eng.pool._allocated).tolist()) == owned
+
+    def test_reclaim_guards_allocation_order(self, api, params):
+        """reclaim() refuses blocks that are currently allocated — the
+        journal-replay ordering guard."""
+        eng = ServeEngine(api, params, _cfg())
+        ids = eng.pool.alloc(2)
+        with pytest.raises(RuntimeError, match="reclaim"):
+            eng.pool.reclaim(ids)
+        eng.pool.free(ids)
+        eng.pool.reclaim(ids)           # legal after the free
+        assert eng.pool._allocated[ids].all()
+        eng.pool.free(ids)              # and freeing again is clean
+        eng.pool.check_invariants()
+
+
+class TestReportSchema:
+    def test_migrations_always_present(self, api, params):
+        """Untiered and migration-disabled engines still report
+        migrations (= 0) — consumers never branch on key presence."""
+        eng = ServeEngine(api, params, _cfg(megastep=2))
+        eng.submit(np.ones(5, np.int32), 8)
+        report = eng.megastep(2)
+        assert report["migrations"] == 0
+        tiered = ServeEngine(api, params, _cfg(
+            megastep=2, tiers="ddr5:2,cxl:2", tier_migrate=False))
+        tiered.submit(np.ones(5, np.int32), 8)
+        assert tiered.megastep(2)["migrations"] == 0
+
+    def test_pipeline_depth_validated(self, api, params):
+        with pytest.raises(ValueError, match="pipeline_depth"):
+            ServeEngine(api, params, _cfg(pipeline_depth=0))
