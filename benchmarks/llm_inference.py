@@ -15,6 +15,7 @@ byte volumes (active params + KV per layer).
 
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 
@@ -155,18 +156,62 @@ def run(smoke: bool = False) -> Bench:
         section = f"llm_pipe{pipeline}"
     elif megastep != 8:
         section = f"llm_megastep{megastep}"
+    elif os.environ.get("REPRO_FAULTS"):
+        # the fault smoke runs in smoke mode at the default width: its
+        # fault-free row must not clobber the full-mode "llm" baseline
+        # — only the "llm_faults" section below belongs to it.
+        section = None
     else:
         section = "llm"
-    update_bench_json(section, {
-        "tokens_per_s": round(tok_s, 1),
-        "steps": int(eng.step_count),
-        "megastep": megastep,
-        "pipeline_depth": pipeline,
-        "host_dispatches": int(st["host_dispatches"]),
-        "host_blocked": int(st["host_blocked"]),
-        "kernel_ceiling_tok_s": round(ceiling, 1),
-        "roofline_frac": round(frac, 4),
-        "duplex_speedup": round(st["duplex_speedup"], 4)})
+    if section is not None:
+        update_bench_json(section, {
+            "tokens_per_s": round(tok_s, 1),
+            "steps": int(eng.step_count),
+            "megastep": megastep,
+            "pipeline_depth": pipeline,
+            "host_dispatches": int(st["host_dispatches"]),
+            "host_blocked": int(st["host_blocked"]),
+            "kernel_ceiling_tok_s": round(ceiling, 1),
+            "roofline_frac": round(frac, 4),
+            "duplex_speedup": round(st["duplex_speedup"], 4)})
+
+    # -- fault-matrix smoke: REPRO_FAULTS=1 re-runs the serve row under
+    # a transient + channel-offline + poisoned-block plan on a tiered
+    # host pool and asserts graceful degradation end-to-end — the run
+    # completes, recovery actually happened (nonzero recovered and
+    # evacuated counters), survivors produced tokens, and the pool's
+    # invariants held. Lands in its own "llm_faults" BENCH section so
+    # the chaos path has a CI trajectory of its own.
+    if os.environ.get("REPRO_FAULTS"):
+        from repro.core.faults import FaultInjector, parse_fault_plan
+        plan = "transient:0@2+40=0.4,offline:2@10,poison:0@6,poison:1@7"
+        fx_eng = ServeEngine(api_s, params, dataclasses.replace(
+            ecfg, tiers="ddr5:1,cxl:2",
+            faults=FaultInjector(parse_fault_plan(plan), seed=0)))
+        outs_f, dt_f = _drive(fx_eng)
+        f = fx_eng.stats()["faults"]
+        served_f = sum(len(v) for v in outs_f.values())
+        assert outs_f, "fault smoke: no survivors"
+        assert f["recovered"] > 0, "fault smoke: nothing recovered"
+        assert f["evacuated"] > 0, \
+            "fault smoke: offline evacuation did not run"
+        fx_eng.pool.check_invariants()
+        b.row("decode/fault-matrix", dt_f * 1e6,
+              f"plan [{plan}]: {f['injected']} injected, "
+              f"{f['recovered']} recovered, {f['evacuated']} evacuated, "
+              f"{f['quarantined']} quarantined, {f['shed']} shed, "
+              f"{len(fx_eng.failed)} failed reqs; {served_f} tok from "
+              f"survivors", provenance=ENGINE)
+        update_bench_json("llm_faults", {
+            "plan": plan,
+            "tokens_served": int(served_f),
+            "injected": int(f["injected"]),
+            "recovered": int(f["recovered"]),
+            "evacuated": int(f["evacuated"]),
+            "quarantined": int(f["quarantined"]),
+            "shed": int(f["shed"]),
+            "failed_requests": len(fx_eng.failed),
+            "retry_us": round(f["retry_us"], 3)})
 
     write_csv("fig6_llm.csv",
               ["phase", "cfs_gbps", "cxlaimpod_gbps", "improvement"],

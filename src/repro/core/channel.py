@@ -75,6 +75,20 @@ class ChannelModel:
         scale = BYTES_PER_GB * STEP_NS * 1e-9
         return (r * scale, w * scale)
 
+    def degraded(self, factor: float) -> "ChannelModel":
+        """This channel at ``factor`` of nominal bandwidth (fault
+        injection: link retraining / thermal throttle). Latency and
+        duplex behaviour are unchanged — only both direction rates
+        scale, so billing under degradation stays on the same
+        effective-bandwidth curve."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError("degradation factor must be in (0, 1]")
+        if factor == 1.0:
+            return self
+        return dataclasses.replace(
+            self, name=f"{self.name}@{factor:g}x",
+            read_bw=self.read_bw * factor, write_bw=self.write_bw * factor)
+
 
 # ---------------------------------------------------------------------------
 # Calibrated presets.

@@ -39,6 +39,7 @@ from repro.core.telemetry import CaxRegistry
 PAGE_IN = 0    # host -> HBM  (prefetch / page-in; link "read")
 PAGE_OUT = 1   # HBM -> host  (writeback / eviction; link "write")
 MIGRATE = 2    # host tier -> host tier (background placement rebalance)
+EVACUATE = 3   # emergency off a failing channel (fault recovery, not idle-BW)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +149,23 @@ def migration_transfers(blocks: Sequence[int], src_slots: Sequence[int],
     if not (len(blocks) == len(src_slots) == len(dst_slots)):
         raise ValueError("each migrated block needs a src and dst slot")
     return [Transfer(MIGRATE, src_block=int(s), dst_block=int(d),
+                     nbytes=block_bytes, hint_path=hint_path)
+            for s, d in zip(src_slots, dst_slots)]
+
+
+def evacuation_transfers(blocks: Sequence[int], src_slots: Sequence[int],
+                         dst_slots: Sequence[int], block_bytes: float,
+                         hint_path: str = "/serve/evacuate"
+                         ) -> list[Transfer]:
+    """Describe emergency channel-evacuation moves as ``EVACUATE``
+    transfers. Same slot-namespace contract as ``migration_transfers``,
+    but these are fault-recovery traffic: the tiered pool bills them
+    immediately into the dying channel's read leg and the survivors'
+    write legs rather than scheduling them into idle minor-direction
+    bandwidth."""
+    if not (len(blocks) == len(src_slots) == len(dst_slots)):
+        raise ValueError("each evacuated block needs a src and dst slot")
+    return [Transfer(EVACUATE, src_block=int(s), dst_block=int(d),
                      nbytes=block_bytes, hint_path=hint_path)
             for s, d in zip(src_slots, dst_slots)]
 

@@ -17,6 +17,7 @@ duplex-vs-serial speedup.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -26,9 +27,10 @@ import numpy as np
 
 from repro import configs as configs_lib
 from repro.core import channel as channel_lib
+from repro.core import faults as faults_lib
 from repro.models import registry as R
-from repro.serve import (EngineConfig, KVStoreTenant, ServeEngine,
-                         VectorSearchTenant)
+from repro.serve import (EngineConfig, EngineStallError, KVStoreTenant,
+                         ServeEngine, VectorSearchTenant)
 
 KNOWN_TENANTS = ("redis", "vectordb")
 
@@ -53,6 +55,18 @@ def _tiers_arg(value: str) -> str | None:
         return None
     try:
         channel_lib.parse_tier_spec(value)
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return value
+
+
+def _faults_arg(value: str) -> str | None:
+    """argparse type for --faults: validate the fault-plan grammar at
+    parse time (the error spells out the event syntax)."""
+    if not value:
+        return None
+    try:
+        faults_lib.parse_fault_plan(value)
     except ValueError as e:
         raise argparse.ArgumentTypeError(str(e)) from None
     return value
@@ -107,6 +121,20 @@ def main() -> int:
                    help="op-stream length for each tenant request")
     p.add_argument("--arrival-every", type=int, default=2,
                    help="steps between request arrivals (0 = all at once)")
+    p.add_argument("--faults", type=_faults_arg, default=None,
+                   help="deterministic fault plan, comma-separated "
+                        "events: offline:C@S (channel C hot-unplugs at "
+                        "pool transaction S), poison:B@S (host copy of "
+                        "block B corrupts), degrade:C@S+D=F (bandwidth "
+                        "x F for D transactions), transient:C@S+D=P "
+                        "(transfer error probability P). Requires "
+                        "paging; offline events require --tiers")
+    p.add_argument("--fault-seed", type=int, default=0,
+                   help="seed for the injector's transient-retry draws")
+    p.add_argument("--stall-boundaries", type=int, default=64,
+                   help="consecutive zero-progress megastep boundaries "
+                        "before run() raises EngineStallError naming "
+                        "the stuck rids")
     p.add_argument("--no-paging", action="store_true",
                    help="disable the duplex KV pool (dense cache only)")
     p.add_argument("--no-warmup", action="store_true",
@@ -131,15 +159,27 @@ def main() -> int:
         max_queue=max(args.requests, args.batch) + 8, policy=args.policy,
         paging=not args.no_paging, megastep=args.megastep,
         tiers=args.tiers, tier_migrate=not args.no_tier_migrate,
-        pipeline_depth=args.pipeline_depth)
+        pipeline_depth=args.pipeline_depth,
+        stall_boundaries=args.stall_boundaries)
     if tenant_names and args.no_paging:
         p.error("tenants serve from the paged pool; drop --no-paging")
     if args.tiers and args.no_paging:
         p.error("--tiers configures the paged pool's host side; drop "
                 "--no-paging")
+    if args.faults and args.no_paging:
+        p.error("--faults targets the paged memory hierarchy; drop "
+                "--no-paging")
 
     def build_and_submit():
-        engine = ServeEngine(api, params, cfg)
+        # a FaultInjector is stateful (clock + retry RNG): each engine
+        # build gets a fresh one so warmup and the measured run replay
+        # the identical fault schedule.
+        run_cfg = cfg
+        if args.faults:
+            run_cfg = dataclasses.replace(cfg, faults=faults_lib.FaultInjector(
+                faults_lib.parse_fault_plan(args.faults),
+                seed=args.fault_seed))
+        engine = ServeEngine(api, params, run_cfg)
         if "redis" in tenant_names:
             kv = engine.add_tenant(KVStoreTenant(
                 n_slots=2, ops_per_step=1, store_blocks=16))
@@ -161,6 +201,25 @@ def main() -> int:
                 arrival_step=i * args.arrival_every).rid)
         return engine, rids
 
+    def _crash_report(engine, exc) -> dict:
+        """Structured operator report for a run the engine could not
+        finish: exception identity, fault counters, and every failed
+        request's structured error (emitted as the process's last JSON
+        line before the nonzero exit)."""
+        err = {
+            "error": {"type": type(exc).__name__, "message": str(exc)},
+            "arch": args.arch,
+            "requests": args.requests,
+            "faults_plan": args.faults,
+            "steps": int(engine.step_count),
+            "faults": engine.stats()["faults"],
+            "failed_requests": {int(r.rid): r.error
+                                for r in engine.failed.values()},
+        }
+        if isinstance(exc, EngineStallError):
+            err["error"]["stuck_rids"] = exc.rids
+        return err
+
     if not args.no_warmup:
         # warmup mirrors the measured workload exactly, so every program
         # the run needs (the fused step, admission, every paging shape
@@ -168,15 +227,22 @@ def main() -> int:
         # (ModelAPI, config) program caches — the measured run below is
         # steady-state serving, not XLA compile time.
         warm, _ = build_and_submit()
-        warm.run()
+        try:
+            warm.run()
+        except (RuntimeError, ValueError) as e:
+            print(json.dumps(_crash_report(warm, e)))
+            return 1
     engine, rids = build_and_submit()
 
     t0 = time.monotonic()
-    outs = engine.run()
+    try:
+        outs = engine.run()
+    except (RuntimeError, ValueError) as e:
+        print(json.dumps(_crash_report(engine, e)))
+        return 1
     dt = time.monotonic() - t0
-    total_tokens = sum(len(outs[r]) for r in rids)
+    total_tokens = sum(len(outs[r]) for r in rids if r in outs)
 
-    first = engine.completed[rids[0]]
     est = engine.stats()
     print(f"served {args.requests} requests / {total_tokens} tokens in "
           f"{engine.step_count} steps / {est['host_dispatches']} host "
@@ -184,8 +250,18 @@ def main() -> int:
           f"(megastep={args.megastep}, "
           f"pipeline={args.pipeline_depth}), {dt:.2f}s "
           f"({total_tokens / dt:.1f} tok/s)")
-    print(f"first request: admitted step {first.admitted_step}, done step "
-          f"{first.done_step}, tokens {outs[rids[0]][:8].tolist()}...")
+    done_rids = [r for r in rids if r in engine.completed]
+    if done_rids:
+        first = engine.completed[done_rids[0]]
+        print(f"first request: admitted step {first.admitted_step}, "
+              f"done step {first.done_step}, tokens "
+              f"{outs[done_rids[0]][:8].tolist()}...")
+    if args.faults:
+        f = est["faults"]
+        print(f"faults: {f['injected']} injected, {f['recovered']} "
+              f"recovered, {f['quarantined']} quarantined, "
+              f"{f['evacuated']} evacuated, {f['shed']} shed, "
+              f"{len(engine.failed)} failed requests")
     if engine.paged and engine.pool.tiered:
         ts = engine.pool.tier_stats()
         print(f"tiered host pool ({args.tiers}): "
@@ -214,6 +290,10 @@ def main() -> int:
         "host_blocked": int(est["host_blocked"]),
         "wall_s": round(dt, 3),
         "tok_s": round(total_tokens / dt, 2),
+        "faults_plan": args.faults,
+        "faults": _round(est["faults"]),
+        "failed_requests": {int(r.rid): r.error
+                            for r in engine.failed.values()},
         "paging": _round(engine.paging_stats()),
     }
     print(json.dumps(report))

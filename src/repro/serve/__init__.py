@@ -30,17 +30,32 @@ The serving stack, layered (see README.md):
                   t+1 is planned and dispatched before t's deferred
                   readback is reconciled, with journaled rollback of
                   speculative pool mutations on divergence.
+  FaultInjector — deterministic fault plans (channel degradation,
+                  transient transfer errors, poisoned host blocks,
+                  channel hot-unplug) serviced once per pool
+                  transaction; the engine degrades gracefully — retry
+                  with billed backoff, quarantine + fail only the owning
+                  request, emergency evacuation, deadline shedding —
+                  and ``run()`` returns the survivors while
+                  ``engine.failed`` carries structured errors.
 """
 
-from repro.serve.engine import EngineConfig, ServeEngine, reference_decode
+from repro.core.faults import (FaultEvent, FaultInjector, parse_fault_plan,
+                               random_plan)
+from repro.serve.engine import (EngineConfig, EngineStallError, ServeEngine,
+                                reference_decode)
 from repro.serve.kv_pool import PagedKVPool
-from repro.serve.queue import Request, RequestQueue, TrafficProfile
+from repro.serve.queue import FAILED, Request, RequestQueue, TrafficProfile
 from repro.serve.tiers import TieredHostPool
 from repro.serve.workloads import (KVStoreTenant, VectorSearchTenant,
                                    WorkloadAPI)
 
 __all__ = [
     "EngineConfig",
+    "EngineStallError",
+    "FAILED",
+    "FaultEvent",
+    "FaultInjector",
     "KVStoreTenant",
     "PagedKVPool",
     "Request",
@@ -50,5 +65,7 @@ __all__ = [
     "TrafficProfile",
     "VectorSearchTenant",
     "WorkloadAPI",
+    "parse_fault_plan",
+    "random_plan",
     "reference_decode",
 ]

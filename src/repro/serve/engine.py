@@ -121,12 +121,25 @@ import numpy as np
 from jax import lax
 
 from repro.core import policies as policies_lib
+from repro.core.faults import fresh_fault_stats
 from repro.core.hints import HintTree, default_serving_hints
 from repro.models.registry import ModelAPI
 from repro.serve.kv_pool import PagedKVPool
-from repro.serve.queue import (DECODE, DONE, PREFILL, STATE_OF_CODE,
-                               Request, RequestQueue, S_DECODE, S_DONE,
-                               S_EMPTY, S_PREFILL)
+from repro.serve.queue import (DECODE, DONE, FAILED, PREFILL,
+                               STATE_OF_CODE, Request, RequestQueue,
+                               S_DECODE, S_DONE, S_EMPTY, S_PREFILL)
+
+
+class EngineStallError(RuntimeError):
+    """``run()`` made no progress for ``cfg.stall_boundaries``
+    consecutive megastep boundaries: nothing live, nothing admitted,
+    nothing completing, no tenant work running — yet requests are still
+    pending (e.g. a queued request whose tenant budget can never open).
+    ``rids`` names the stuck requests."""
+
+    def __init__(self, message: str, rids):
+        super().__init__(message)
+        self.rids = list(rids)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,6 +196,13 @@ class EngineConfig:
                                 # loop); 2 = double-buffered — plan and
                                 # dispatch t+1 before reconciling t's
                                 # deferred readback. Bit-exact either way.
+    faults: object = None       # core.faults.FaultInjector (or None) —
+                                # deterministic fault plan serviced by
+                                # the pool's transactions; requires
+                                # paging. None = zero-cost, no fault
+                                # machinery anywhere on the hot path.
+    stall_boundaries: int = 64  # run(): consecutive zero-progress
+                                # boundaries before EngineStallError
 
     def resolved_pool_blocks(self) -> int:
         if self.pool_blocks:
@@ -477,13 +497,19 @@ class ServeEngine:
         # top-level transformer K/V layout.
         self._ring_cache = api.cache_kind == "ring"
         self.paged = cfg.paging and kv is not None
+        if cfg.faults is not None and not self.paged:
+            raise ValueError(
+                "fault injection targets the paged memory hierarchy; "
+                "this engine has paging disabled (or a non-pageable "
+                "cache family)")
+        self._fx = cfg.faults if self.paged else None
         if self.paged:
             L, _, _, KV, hd = kv["k"].shape
             kv_dims = L * 2 * KV * hd
             self.pool = PagedKVPool(
                 cfg.resolved_pool_blocks(), cfg.hbm_blocks,
                 (cfg.block_tokens, kv_dims), hints=self.hints,
-                tiers=cfg.tiers)
+                tiers=cfg.tiers, faults=cfg.faults)
             kv_bytes = float(kv_dims * 2)
         else:
             self.pool = None
@@ -510,6 +536,7 @@ class ServeEngine:
         # row of every boundary can share this one buffer.
         self._fb_zero = np.zeros((self.queue.capacity,), np.float32)
         self.completed: dict[int, Request] = {}
+        self.failed: dict[int, Request] = {}     # FAILED terminal records
         self._scan_cursor: dict[int, int] = {}   # rid -> cold-block cursor
         # non-LLM tenants (WorkloadAPI) sharing the pool, the paging
         # transaction, and the admission queue with LLM decode.
@@ -659,6 +686,8 @@ class ServeEngine:
         for t in range(k):
             rows = []
             for r in live:
+                if r.state == FAILED:
+                    continue
                 st = traj[r.rid][t]
                 if st.state != S_DONE:
                     rows.append((r, st))
@@ -667,6 +696,8 @@ class ServeEngine:
                                        rec.journal)
                 report["page_ins"] += rep["page_ins"]
                 report["page_outs"] += rep["page_outs"]
+                if self._fx is not None:
+                    self._service_fault_report(rep, now + t, rec)
                 # rows completing at this inner step release their pool
                 # blocks NOW (deterministic), exactly when the per-step
                 # loop would have — holding them to the boundary would
@@ -703,12 +734,18 @@ class ServeEngine:
             # restoration.
             report["migrations"] = self.pool.migrate_tiers()["migrations"]
 
+        if self._fx is not None and self.paged \
+                and self.pool.host.capacity_degraded:
+            self._shed_over_capacity(rec)
+
         # the megastep's outcome — bar token values — is already decided,
         # so the planning view advances NOW: speculative mirrors jump to
         # the trajectory's final step and predicted-DONE rows leave their
         # slots (trajectory-driven retirement), letting the next _plan()
         # admit into the post-megastep batch before this readback lands.
         for r in live:
+            if r.state == FAILED:
+                continue
             last = traj[r.rid][-1]
             r.speculate(STATE_OF_CODE[last.state], last.consumed,
                         last.n_gen)
@@ -757,6 +794,8 @@ class ServeEngine:
         ``done_step`` the classic post-readback retirement did."""
         n = 0
         for r in rec.live:
+            if r.state == FAILED:
+                continue
             steps_r = rec.traj[r.rid]
             if steps_r[-1].state != S_DONE:
                 continue
@@ -791,22 +830,43 @@ class ServeEngine:
             rb = self._readback(rec.packed)
             try:
                 for r in rec.live:
+                    if r.state == FAILED:
+                        # failed mid-flight (poison/casualty/shed): the
+                        # device row's readback is moot — the request
+                        # already carries its structured error.
+                        continue
                     steps_r = rec.traj[r.rid]
                     toks = [int(rb[r.slot, 3 + t])
                             for t, st in enumerate(steps_r) if st.emitted]
                     c0, g0 = r.consumed, len(r.generated)
-                    r.sync_megastep(int(rb[r.slot, 0]),
-                                    int(rb[r.slot, 1]),
-                                    int(rb[r.slot, 2]), toks)
+                    dev_state = int(rb[r.slot, 0])
+                    dev_consumed = int(rb[r.slot, 1])
+                    dev_ngen = int(rb[r.slot, 2])
                     last = steps_r[-1]
-                    if (STATE_OF_CODE[last.state] != r.state
-                            or last.consumed != r.consumed):
+                    exp_ngen = g0 + sum(st.emitted for st in steps_r)
+                    fields = []
+                    if STATE_OF_CODE.get(dev_state) != \
+                            STATE_OF_CODE[last.state]:
+                        fields.append(
+                            f"state (host planned "
+                            f"{STATE_OF_CODE[last.state]}, device "
+                            f"reported {STATE_OF_CODE.get(dev_state, f'code {dev_state}')})")
+                    if dev_consumed != last.consumed:
+                        fields.append(
+                            f"consumed (host planned {last.consumed}, "
+                            f"device reported {dev_consumed})")
+                    if dev_ngen != exp_ngen:
+                        fields.append(
+                            f"n_gen (host planned {exp_ngen}, device "
+                            f"reported {dev_ngen})")
+                    if fields:
                         raise RuntimeError(
-                            f"rid {r.rid}: device state "
-                            f"({r.state}, consumed={r.consumed}) diverged "
-                            f"from the host trajectory "
-                            f"({STATE_OF_CODE[last.state]}, "
-                            f"consumed={last.consumed})")
+                            f"rid {r.rid}: boundary at step {rec.now} "
+                            f"(k={rec.k}): device readback diverged "
+                            f"from the host trajectory on "
+                            + "; ".join(fields))
+                    r.sync_megastep(dev_state, dev_consumed,
+                                    dev_ngen, toks)
                     advanced += ((last.consumed + last.n_gen) - (c0 + g0)
                                  - sum(st.transition for st in steps_r))
             except RuntimeError:
@@ -841,6 +901,111 @@ class ServeEngine:
                     req.blocks_freed = False
             rec.journal = []
 
+    # -- fault recovery (graceful degradation) -------------------------------
+    def _total_blocks(self, r: Request) -> int:
+        """Every KV block this LLM request will ever hold."""
+        return math.ceil((r.prompt_len + r.max_new_tokens)
+                         / self.cfg.block_tokens)
+
+    def _committed_blocks(self) -> int:
+        """Host-capacity commitment: live LLM rows' eventual full block
+        footprint plus whatever else (tenants) holds pool blocks now —
+        the steady-state demand surviving host capacity must cover."""
+        live = [r for r in self.slots
+                if r is not None and r.state != FAILED]
+        need = sum(self._total_blocks(r) for r in live)
+        other = (int(self.pool._allocated.sum())
+                 - sum(len(r.blocks) for r in live))
+        return need + max(0, other)
+
+    def _fail_request(self, r: Request, error: dict, journal: list
+                      ) -> None:
+        """Move one request to the FAILED terminal state: structured
+        ``error`` attached, pool blocks freed (journaled, so a later
+        divergence rollback stays ownership-consistent), slot vacated.
+        Partial output stays on the request (``engine.failed[rid]``);
+        everyone else keeps being served."""
+        if r.state == FAILED:
+            return
+        r.state = FAILED
+        r.spec = None
+        r.error = dict(error)
+        r.done_step = int(error.get("step", self.step_count))
+        if self.paged and r.blocks and not r.blocks_freed:
+            self.pool.free(r.blocks)
+            r.blocks_freed = True
+            journal.append(("free", r, list(r.blocks)))
+        self._scan_cursor.pop(r.rid, None)
+        if 0 <= r.slot < len(self.slots) and self.slots[r.slot] is r:
+            self.slots[r.slot] = None
+        self.failed[r.rid] = r
+        if self._fx is not None:
+            self._fx.stats["failed"] += 1
+
+    def _service_fault_report(self, rep: dict, step_now: int,
+                              rec: _InFlight) -> None:
+        """Translate one pool transaction's fault report into request
+        consequences: a poisoned (checksum-mismatched) or
+        evacuation-casualty block fails its owning LLM request — and
+        ONLY that request. Blocks owned by non-LLM tenants come back
+        zero-installed (modelled data loss; KV-store semantics: the
+        value is gone) — the tenant keeps running. Unowned blocks are
+        already counted by the injector."""
+        for kind, blocks in (("poisoned_block", rep.get("poisoned", ())),
+                             ("evacuation_casualty",
+                              rep.get("casualties", ()))):
+            for b in blocks:
+                owner = next(
+                    (r for r in self.slots
+                     if r is not None and r.state != FAILED
+                     and b in r.blocks), None)
+                if owner is not None:
+                    self._fail_request(
+                        owner, {"kind": kind, "block": int(b),
+                                "step": int(step_now)}, rec.journal)
+
+    def _shed_over_capacity(self, rec: _InFlight) -> None:
+        """Deadline-based load shedding once host capacity degrades
+        (channel offline / quarantined slots): while the committed block
+        footprint exceeds surviving capacity, fail live rows — doomed
+        deadlines first (they cannot finish in time anyway), then the
+        largest footprints — and drop queued LLM requests that could
+        never fit even alone, so ``run()`` drains cleanly instead of
+        stalling on unservable work."""
+        fx = self._fx
+        cap_live = self.pool.host.live_capacity()
+        committed = self._committed_blocks()
+        now = self.step_count
+        if committed > cap_live:
+            live = [r for r in self.slots
+                    if r is not None and r.state != FAILED]
+
+            def doomed(r: Request) -> bool:
+                return (r.deadline_step is not None
+                        and now + self._steps_until_done(r)
+                        > r.deadline_step)
+
+            for r in sorted(live, key=lambda r: (not doomed(r),
+                                                 -self._total_blocks(r),
+                                                 r.rid)):
+                if committed <= cap_live:
+                    break
+                committed -= self._total_blocks(r)
+                self._fail_request(
+                    r, {"kind": "shed", "step": now,
+                        "committed_blocks": committed
+                        + self._total_blocks(r),
+                        "live_capacity": cap_live}, rec.journal)
+                fx.stats["shed"] += 1
+        for r in list(self.queue.waiting()):
+            if r.tenant == "llm" and self._total_blocks(r) > cap_live:
+                self.queue.remove(r)
+                self._fail_request(
+                    r, {"kind": "shed", "step": now,
+                        "needed_blocks": self._total_blocks(r),
+                        "live_capacity": cap_live}, rec.journal)
+                fx.stats["shed"] += 1
+
     def run(self, max_steps: int | None = None) -> dict[int, np.ndarray]:
         """Drive megasteps until every submitted request completes.
 
@@ -858,16 +1023,45 @@ class ServeEngine:
         reconciling t's deferred readback, so the host's planning work
         overlaps the device's still-in-flight compute and only the final
         drain blocks with nothing dispatched ahead (``host_blocked``
-        counts those bubbles). Results are bit-exact across depths."""
+        counts those bubbles). Results are bit-exact across depths.
+
+        Under fault injection the returned dict holds the *survivors*;
+        requests failed by poisoned blocks, evacuation casualties or
+        load shedding land in ``self.failed`` with a structured
+        ``Request.error`` — partial results, not a dropped fleet. A
+        boundary that makes no progress at all (nothing live, nothing
+        admitted, no tenant running) ``cfg.stall_boundaries`` times in
+        a row raises ``EngineStallError`` naming the stuck rids instead
+        of spinning to the step limit."""
         limit = max_steps if max_steps is not None else 10_000
         depth = max(1, self.cfg.pipeline_depth)
+        stall_cap = max(1, self.cfg.stall_boundaries)
         done_steps = 0
+        stall = 0
         while done_steps < limit:
             if not self.pending():
                 break
             k = self._auto_megastep(limit - done_steps)
-            self._dispatch(self._plan(k))
+            rec = self._plan(k)
+            self._dispatch(rec)
             done_steps += k
+            progress = (rec.admitted > 0 or bool(rec.live)
+                        or any(tn.running()
+                               for tn in self.tenants.values()))
+            stall = 0 if progress else stall + 1
+            if stall >= stall_cap:
+                while self._inflight:
+                    self._reconcile(self._inflight[0])
+                stuck = sorted(
+                    [r.rid for r in self.queue.waiting()]
+                    + [r.rid for r in self.active()]
+                    + [r.rid for t in self.tenants.values()
+                       for r in t.running()])
+                raise EngineStallError(
+                    f"no progress for {stall_cap} consecutive megastep "
+                    f"boundaries (step {self.step_count}): rids {stuck} "
+                    f"are stuck (never admitted, never advancing)",
+                    stuck)
             while len(self._inflight) >= depth:
                 self._reconcile(self._inflight[0])
         while self._inflight:
@@ -1020,7 +1214,17 @@ class ServeEngine:
         per_adm = max(self._worst_step_blocks(r.prompt_len,
                                               r.max_new_tokens, True)
                       for r in arrived)
-        return min(n_free, headroom // per_adm)
+        budget = min(n_free, headroom // per_adm)
+        if (self._fx is not None
+                and self.pool.host.capacity_degraded):
+            # degraded-capacity backpressure: never commit more eventual
+            # host blocks than the surviving channels can hold — place()
+            # is sticky, so every admitted block needs a live slot.
+            per_total = max(self._total_blocks(r) for r in arrived)
+            room = (self.pool.host.live_capacity()
+                    - self._committed_blocks())
+            budget = min(budget, max(0, room) // per_total)
+        return budget
 
     def _admit(self, now: int) -> int:
         free = [i for i, r in enumerate(self.slots) if r is None]
@@ -1205,7 +1409,9 @@ class ServeEngine:
         return {"steps": self.step_count,
                 "host_dispatches": self.host_dispatches,
                 "megasteps": self.megasteps,
-                "host_blocked": self.host_blocked}
+                "host_blocked": self.host_blocked,
+                "faults": (dict(self._fx.stats) if self._fx is not None
+                           else fresh_fault_stats())}
 
     def paging_stats(self) -> dict:
         if not self.paged:

@@ -160,7 +160,7 @@ class PagedKVPool:
     def __init__(self, n_blocks: int, hbm_blocks: int, block_shape,
                  hints: HintTree | None = None,
                  link: channel_lib.ChannelModel = channel_lib.PCIE_HOST,
-                 tiers=None, migrate_max: int = 8):
+                 tiers=None, migrate_max: int = 8, faults=None):
         if hbm_blocks < 1:
             raise ValueError("need at least one HBM block")
         self.n_blocks = n_blocks
@@ -197,6 +197,20 @@ class PagedKVPool:
         self.engine = DuplexOffloadEngine(
             link=link, hints=hints or default_serving_hints())
         self.stats = _fresh_stats()
+        # fault injection (core.faults.FaultInjector). With no injector
+        # attached NONE of the fault machinery exists: no checksum
+        # arrays, no per-transaction tick, no extra branches past a
+        # single ``is None`` — the disabled layer is zero-cost.
+        self._fx = faults
+        self._csum_data = self._csum_stamp = None
+        self._stamp = 0
+        if faults is not None:
+            self.host.attach_faults(faults)
+            # per-block host-copy checksums, stamped at page-out and
+            # verified at page-in (modelled: a poison bumps _csum_data
+            # so the verify mismatches, exactly like a real CRC).
+            self._csum_data = np.zeros((n_blocks,), np.int64)
+            self._csum_stamp = np.zeros((n_blocks,), np.int64)
 
     # -- allocation (request lifecycle) ------------------------------------
     def alloc(self, k: int = 1) -> list[int]:
@@ -345,6 +359,12 @@ class PagedKVPool:
                 f"{self.hbm_capacity}; cap the per-step working set")
         self.stats["steps"] += 1
         report = {"page_ins": 0, "page_outs": 0}
+        if self._fx is not None:
+            # quarantined blocks lose _has_host and fall through to the
+            # fresh-install path below (zero-filled rows): reads stay
+            # legal, the data loss is the modelled consequence, and the
+            # engine fails the owning LLM request off this report.
+            report.update(self._service_faults(all_needed))
         if all_needed.size:
             n_missing = int((self.slot_of[all_needed] < 0).sum())
             free_slots = np.flatnonzero(self.block_at < 0)
@@ -371,6 +391,88 @@ class PagedKVPool:
                 report["page_outs"] += r["page_outs"]
         self._touch(all_needed)
         return report
+
+    # -- fault servicing (one pass per transaction, injector attached) ------
+    def _service_faults(self, all_needed: np.ndarray) -> dict:
+        """Advance the fault clock and service armed events: corrupt the
+        host copies of newly poisoned blocks, hot-unplug newly offline
+        channels (placement write-off + emergency evacuation), and
+        verify checksums on every host copy this transaction is about to
+        page in — mismatches quarantine the host slot and surface in the
+        report for the engine to fail the owning request."""
+        fx = self._fx
+        fx.tick()
+        rep = {"poisoned": [], "offline": [], "casualties": [],
+               "evacuated": 0}
+        for b in fx.drain_poison():
+            if 0 <= b < self.n_blocks and self._has_host[b]:
+                self._csum_data[b] += 1     # modelled media corruption
+            else:
+                fx.rearm_poison(b)          # nothing to corrupt yet
+        for c in fx.drain_offline():
+            if self.identity_host():
+                raise RuntimeError(
+                    "offline fault on a flat (single-channel) host pool "
+                    "— configure tiers to model channel loss")
+            self.host.set_offline(c)
+            casualties, moved = self._evacuate_channel(c)
+            rep["offline"].append(c)
+            rep["casualties"].extend(casualties)
+            rep["evacuated"] += moved
+        if all_needed.size:
+            cand = all_needed[(self.slot_of[all_needed] < 0)
+                              & self._has_host[all_needed]]
+            bad = cand[self._csum_data[cand] != self._csum_stamp[cand]]
+            if bad.size:
+                hs = self.host.slot_of[bad]
+                self.host.quarantine(hs[hs >= 0])
+                self._has_host[bad] = False
+                self._dirty[bad] = False
+                fx.stats["quarantined"] += int(bad.size)
+                rep["poisoned"] = bad.tolist()
+        return rep
+
+    def identity_host(self) -> bool:
+        return self.host.identity
+
+    def _evacuate_channel(self, c: int) -> tuple[list[int], int]:
+        """Move a dying channel's live host rows onto surviving channels
+        (``TieredHostPool.evacuate`` picks destinations and bills the
+        legs); the data copy is the same fixed-width jitted row program
+        boundary migrations use. Blocks with no surviving slot lose
+        their host copy — the engine fails their owners off the report.
+        Returns ``(casualty_blocks, n_moved)``."""
+        mig0 = self.host.migrate_us
+        blocks, src, dst, casualties = self.host.evacuate(c)
+        # the evacuation legs billed on the host channels also land in
+        # the pool-level migration clock tier_stats() reports.
+        self.stats["migrate_us"] += self.host.migrate_us - mig0
+        n = int(blocks.size)
+        if n:
+            width = 1 << max(0, (n - 1).bit_length())
+            s = np.zeros((width,), np.int32)
+            d = np.full((width,), self.host.total_slots, np.int32)
+            s[:n] = src
+            d[:n] = dst
+            self.host_q, self.host_scale = _migrate_rows(
+                self.host_q, self.host_scale, jnp.asarray(s),
+                jnp.asarray(d))
+        lost = []
+        if casualties:
+            ca = np.asarray(casualties, np.int32)
+            self._has_host[ca] = False
+            # HBM-resident casualties still hold valid data on-device:
+            # mark them dirty so the next eviction re-writes a host copy
+            # (losing the slot, not the bytes). Non-resident casualties
+            # ARE data loss — report them so the engine fails the owner.
+            resident = ca[self.slot_of[ca] >= 0]
+            gone = ca[self.slot_of[ca] < 0]
+            self._dirty[resident] = True
+            self._dirty[gone] = False
+            lost = [int(b) for b in gone]
+        self._fx.stats["evacuated"] += n
+        self._fx.stats["recovered"] += n
+        return lost, n
 
     def _pick_victims(self, k: int, keep: np.ndarray) -> np.ndarray:
         """k least-recently-used resident blocks outside ``keep``."""
@@ -454,6 +556,18 @@ class PagedKVPool:
                     self.engine.link)
                 duplex_us = plan.modelled_time_us()
                 serial_us = serial.modelled_time_us()
+                if self._fx is not None:
+                    # flat pool = one channel (index 0): a degrade window
+                    # scales both modelled times inversely (pure
+                    # bandwidth scaling) and transient retries bill their
+                    # failed attempts + backoff into both views.
+                    factor = self._fx.bandwidth_factor(0)
+                    if factor < 1.0:
+                        duplex_us /= factor
+                        serial_us /= factor
+                    extra = self._fx.retry_penalty_us(0, duplex_us)
+                    duplex_us += extra
+                    serial_us += extra
             bp = self.stats["by_path"].setdefault(hint_path,
                                                   _fresh_path_stats())
             for st, key, val in (
@@ -511,6 +625,11 @@ class PagedKVPool:
         if outs.size:
             self._has_host[outs] = True
             self._dirty[outs] = False   # host copy now matches
+            if self._fx is not None:
+                # stamp the page-out checksum; verified at page-in.
+                self._stamp += 1
+                self._csum_data[outs] = self._stamp
+                self._csum_stamp[outs] = self._stamp
         self.slot_of[missing] = dst
         self.block_at[dst] = missing
         return {"page_ins": int(stale.size), "page_outs": int(outs.size)}

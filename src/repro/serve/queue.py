@@ -28,6 +28,11 @@ from repro.core import policies as policies_lib
 from repro.core.hints import HintTree, default_serving_hints
 
 WAITING, PREFILL, DECODE, DONE = "waiting", "prefill", "decode", "done"
+#: terminal failure state (fault recovery: poisoned block, evacuation
+#: casualty, capacity shedding). A FAILED request carries a structured
+#: ``error`` dict and whatever partial output it produced; the engine
+#: keeps serving everyone else.
+FAILED = "failed"
 
 # Device-visible state codes: the engine's fused step loop keeps per-slot
 # request state in int32 device arrays and mirrors it back onto Request
@@ -90,6 +95,13 @@ class Request:
     slot: int = -1                      # engine batch slot while running
     admitted_step: int = -1
     done_step: int = -1
+    #: structured failure record once ``state == FAILED``:
+    #: ``{"kind": "poisoned_block"|"evacuation_casualty"|"shed"|...,
+    #:    "step": <engine step>, ...kind-specific fields}``.
+    error: dict | None = None
+    #: optional completion deadline (engine step). Under degraded
+    #: capacity the engine sheds doomed-deadline requests first.
+    deadline_step: int | None = None
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -248,6 +260,19 @@ class RequestQueue:
         if now is not None:
             out = [r for r in out if r.arrival_step <= now]
         return out
+
+    def remove(self, req: Request) -> bool:
+        """Withdraw a still-waiting request (fault shedding: under
+        degraded capacity the engine removes queued requests that can
+        never fit the surviving host tiers, instead of letting them
+        starve the waiting room forever). Resets the vacated slot's
+        policy state exactly like an admission would."""
+        for i, cur in enumerate(self._slots):
+            if cur is req:
+                self._slots[i] = None
+                self._reset_slot_state([i])
+                return True
+        return False
 
     def __len__(self) -> int:
         return len(self.waiting())

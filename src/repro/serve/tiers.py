@@ -130,6 +130,14 @@ class TieredHostPool:
         # per-channel byte window since the last migration boundary (the
         # idle-minor-direction budget source) + cumulative totals
         self._win = np.zeros((C, 2), np.float64)        # [read, write]
+        # fault state: an offline channel is excluded from placement and
+        # holds no free slots; quarantined/lost slots are permanently out
+        # of circulation (occupancy invariant: used + free + quarantined
+        # + lost == cap per channel).
+        self._fx = None
+        self.offline = np.zeros((C,), bool)
+        self._quarantined = np.zeros((C,), np.int64)
+        self._lost = np.zeros((C,), np.int64)
         self.totals = [
             {"kind": self.kinds[c], "page_in_blocks": 0,
              "page_out_blocks": 0, "read_bytes": 0.0, "write_bytes": 0.0,
@@ -183,6 +191,8 @@ class TieredHostPool:
         kind = self.kind_names[kind_id]
 
         def ok(c: int, same_kind: bool) -> bool:
+            if self.offline[c]:
+                return False
             if same_kind and self.kinds[c] != kind:
                 return False
             if not self._free[c]:
@@ -293,12 +303,25 @@ class TieredHostPool:
         self._win[:, 0] += rd
         self._win[:, 1] += wr
         duplex = serial = 0.0
+        fx = self._fx
         for c in range(C):
+            ch = self.channels[c]
+            if fx is not None:
+                factor = fx.bandwidth_factor(c)
+                if factor < 1.0:
+                    ch = ch.degraded(factor)
             phase_us = offload_lib.phase_separated_time_us(
-                self.channels[c], rd[c], wr[c])
+                ch, rd[c], wr[c])
             billed_us = (offload_lib.channel_time_us(
-                self.channels[c], rd[c], wr[c]) if co_issued
+                ch, rd[c], wr[c]) if co_issued
                 else phase_us)
+            if fx is not None and billed_us > 0.0:
+                # transient-retry penalty: failed attempts re-pay the
+                # transfer time plus backoff, in BOTH time views (a
+                # retry storm isn't a duplex-vs-serial effect).
+                extra = fx.retry_penalty_us(c, billed_us)
+                billed_us += extra
+                phase_us += extra
             duplex = max(duplex, billed_us)
             serial = max(serial, phase_us)
             t = self.totals[c]
@@ -472,6 +495,121 @@ class TieredHostPool:
         for dst in plan.dst_slots.tolist():
             self._free[int(self.channel_of_slot[dst])].append(dst)
 
+    # -- fault handling -------------------------------------------------------
+    def attach_faults(self, fx) -> None:
+        """Attach a ``core.faults.FaultInjector``; billing consults its
+        degrade/transient windows and the pool drives offline/poison
+        servicing through ``set_offline``/``evacuate``/``quarantine``."""
+        self._fx = fx
+
+    @property
+    def capacity_degraded(self) -> bool:
+        """True once any channel is offline or any slot is quarantined —
+        the engine's cue to apply admission backpressure and shed."""
+        return bool(self.offline.any() or self._quarantined.sum() > 0)
+
+    def live_capacity(self) -> int:
+        """Host blocks still placeable: total slots minus lost and
+        quarantined ones, capped at the block count."""
+        usable = (self.total_slots - int(self._lost.sum())
+                  - int(self._quarantined.sum()))
+        return min(self.n_blocks, max(0, usable))
+
+    def set_offline(self, c: int) -> None:
+        """Hot-unplug channel ``c``: exclude it from placement and write
+        off its free slots. Live blocks stay mapped until ``evacuate``
+        moves them (the pool calls both in the same transaction)."""
+        if self.identity:
+            raise RuntimeError(
+                "cannot offline the only channel of a flat host pool")
+        if self.offline[c]:
+            return
+        self.offline[c] = True
+        self._lost[c] += len(self._free[c])
+        self._free[c] = []
+
+    def quarantine(self, slots) -> None:
+        """Permanently retire host slots (poisoned media). Occupied
+        slots are unmapped — the caller fails/re-pages the owning block
+        — and the slot never returns to the free list. Identity pools
+        only unmap (slot==block; a later rewrite models the device
+        scrubbing the page in place)."""
+        for s in np.asarray(slots, np.int64).reshape(-1).tolist():
+            b = int(self.block_of[s])
+            if b >= 0:
+                self.block_of[s] = -1
+                self.slot_of[b] = -1
+                self.pref[b] = -1
+            if self.identity:
+                continue
+            c = int(self.channel_of_slot[s])
+            if b < 0:
+                try:
+                    self._free[c].remove(s)
+                except ValueError:
+                    continue      # already retired (offline write-off)
+            self._quarantined[c] += 1
+
+    def evacuate(self, c: int) -> tuple[np.ndarray, np.ndarray,
+                                        np.ndarray, list[int]]:
+        """Emergency-evacuate channel ``c``'s live blocks onto surviving
+        channels (WRR over each block's preferred kind, cross-tier
+        fallback allowed — any port in a storm). Returns ``(blocks,
+        src_slots, dst_slots, casualties)``; casualties are blocks with
+        no surviving slot, whose host copy is lost (the pool drops their
+        residency and the engine fails the owners). Unlike boundary
+        migrations this is NOT idle-bandwidth traffic: the read leg is
+        billed on the dying channel and each write leg on its
+        destination channel — recovery bandwidth is never free."""
+        lo, hi = int(self.base[c]), int(self.base[c] + self.cap[c])
+        moved_b: list[int] = []
+        moved_src: list[int] = []
+        moved_dst: list[int] = []
+        casualties: list[int] = []
+        for s in range(lo, hi):
+            b = int(self.block_of[s])
+            if b < 0:
+                continue
+            kid = (int(self.pref[b]) if self.pref[b] >= 0
+                   else self.pref_default())
+            dc = self._pick_channel(kid, fallback=True)
+            self.block_of[s] = -1
+            self._lost[c] += 1
+            if dc < 0:
+                self.slot_of[b] = -1
+                self.pref[b] = -1
+                casualties.append(b)
+                continue
+            dst = self._free[dc].pop()
+            self.slot_of[b] = dst
+            self.block_of[dst] = b
+            moved_b.append(b)
+            moved_src.append(s)
+            moved_dst.append(dst)
+            self.totals[c]["migrated_out"] += 1
+            self.totals[dc]["migrated_in"] += 1
+        bb = self.block_bytes
+        if moved_b:
+            transfers = offload_lib.evacuation_transfers(
+                moved_b, moved_src, moved_dst, bb)
+            rd_us = offload_lib.phase_separated_time_us(
+                self.channels[c], len(transfers) * bb, 0.0)
+            self.totals[c]["read_bytes"] += len(transfers) * bb
+            self.totals[c]["busy_us"] += rd_us
+            self.migrate_us += rd_us
+            wr = np.bincount(
+                self.channel_of_slot[np.asarray(moved_dst, np.int64)],
+                minlength=len(self.channels)).astype(np.float64) * bb
+            for dc in np.flatnonzero(wr > 0).tolist():
+                wr_us = offload_lib.phase_separated_time_us(
+                    self.channels[dc], 0.0, wr[dc])
+                self.totals[dc]["write_bytes"] += wr[dc]
+                self.totals[dc]["busy_us"] += wr_us
+                self.migrate_us += wr_us
+        return (np.asarray(moved_b, np.int32),
+                np.asarray(moved_src, np.int32),
+                np.asarray(moved_dst, np.int32), casualties)
+
     # -- reporting / invariants ----------------------------------------------
     def reset_stats(self) -> None:
         """Zero the per-channel accounting (totals, the boundary traffic
@@ -489,13 +627,18 @@ class TieredHostPool:
 
     def stats(self) -> dict:
         out: dict[str, dict] = {}
+        occ = self.block_of >= 0
         for c, t in enumerate(self.totals):
             name = f"{self.kinds[c]}:{c}"
+            lo, hi = int(self.base[c]), int(self.base[c] + self.cap[c])
             out[name] = {
                 **{k: (round(v, 3) if isinstance(v, float) else v)
                    for k, v in t.items()},
-                "slots_used": int(self.cap[c]) - len(self._free[c]),
+                "slots_used": int(occ[lo:hi].sum()),
                 "slots": int(self.cap[c]),
+                "offline": bool(self.offline[c]),
+                "quarantined": int(self._quarantined[c]),
+                "lost": int(self._lost[c]),
             }
         return out
 
@@ -525,8 +668,13 @@ class TieredHostPool:
                                      f"out-of-range slots")
             if len(set(free)) != len(free):
                 raise AssertionError(f"channel {c} free list duplicates")
+            if self.offline[c] and (free or
+                                    ((occupied >= lo) & (occupied < hi)).any()):
+                raise AssertionError(
+                    f"offline channel {c} still holds slots")
             used = ((occupied >= lo) & (occupied < hi)).sum()
-            if used + len(free) != self.cap[c]:
+            retired = int(self._quarantined[c]) + int(self._lost[c])
+            if used + len(free) + retired != self.cap[c]:
                 raise AssertionError(
                     f"channel {c} occupancy {used} + free {len(free)} "
-                    f"!= capacity {self.cap[c]}")
+                    f"+ retired {retired} != capacity {self.cap[c]}")
