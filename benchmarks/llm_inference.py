@@ -156,10 +156,11 @@ def run(smoke: bool = False) -> Bench:
         section = f"llm_pipe{pipeline}"
     elif megastep != 8:
         section = f"llm_megastep{megastep}"
-    elif os.environ.get("REPRO_FAULTS"):
-        # the fault smoke runs in smoke mode at the default width: its
-        # fault-free row must not clobber the full-mode "llm" baseline
-        # — only the "llm_faults" section below belongs to it.
+    elif os.environ.get("REPRO_FAULTS") or os.environ.get("REPRO_SHARD"):
+        # the fault and shard smokes run in smoke mode at the default
+        # width: their fault-free single-device row must not clobber the
+        # full-mode "llm" baseline — only the "llm_faults"/"llm_shard<N>"
+        # sections below belong to them.
         section = None
     else:
         section = "llm"
@@ -212,6 +213,53 @@ def run(smoke: bool = False) -> Bench:
             "shed": int(f["shed"]),
             "failed_requests": len(fx_eng.failed),
             "retry_us": round(f["retry_us"], 3)})
+
+    # -- sharded-serving smoke: REPRO_SHARD=<N> re-runs the serve row on
+    # a data × model mesh over N (forced-host) devices and
+    # differential-asserts the tokens against the single-device run
+    # above — the benchmark-level echo of tests/test_shard_serve.py.
+    # Lands in "llm_shard<N>" with tok/s, roofline_frac and per-link ICI
+    # bytes so the sharded path gets its own CI perf trajectory.
+    if os.environ.get("REPRO_SHARD"):
+        from repro.launch.mesh import make_debug_mesh
+        from repro.serve import ShardedServeEngine
+        n_dev = min(int(os.environ["REPRO_SHARD"]), len(jax.devices()))
+        model = 2 if n_dev % 2 == 0 else 1
+        mesh = make_debug_mesh(model, devices=jax.devices()[:n_dev])
+        _drive(ShardedServeEngine(api_s, params, ecfg, mesh=mesh))  # warm
+        s_eng = ShardedServeEngine(api_s, params, ecfg, mesh=mesh)
+        outs_s, dt_s = _drive(s_eng)
+        for a, b_ in zip((outs[r] for r in sorted(outs)),
+                         (outs_s[r] for r in sorted(outs_s))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+        if s_eng.pool is not None:
+            s_eng.pool.check_invariants()
+        st_s = s_eng.paging_stats()
+        ici = st_s["ici"]
+        links = {p.rsplit("/", 1)[1]: round(q["bytes"], 1)
+                 for p, q in st_s["by_path"].items()
+                 if p.startswith("/serve/ici/")}
+        tokens_s = sum(len(v) for v in outs_s.values())
+        tok_s_sh = tokens_s / dt_s
+        frac_sh = tok_s_sh / ceiling if ceiling > 0 else 0.0
+        b.row("decode/sharded", dt_s * 1e6,
+              f"mesh {st_s['mesh']['data']}x{st_s['mesh']['model']} over "
+              f"{n_dev} devices: {tok_s_sh:.0f} tok/s = {frac_sh:.0%} of "
+              f"single-device ceiling, bit-exact with the 1-device run; "
+              f"ici {ici['bytes']:.0f} B / {ici['collectives']} "
+              f"collectives ({links})", provenance=ENGINE)
+        update_bench_json(f"llm_shard{n_dev}", {
+            "tokens_per_s": round(tok_s_sh, 1),
+            "mesh_data": st_s["mesh"]["data"],
+            "mesh_model": st_s["mesh"]["model"],
+            "megastep": megastep,
+            "pipeline_depth": pipeline,
+            "kernel_ceiling_tok_s": round(ceiling, 1),
+            "roofline_frac": round(frac_sh, 4),
+            "ici_bytes": round(ici["bytes"], 1),
+            "ici_collectives": int(ici["collectives"]),
+            "ici_duplex_us": round(ici["duplex_us"], 3),
+            "ici_bytes_per_link": links})
 
     write_csv("fig6_llm.csv",
               ["phase", "cfs_gbps", "cxlaimpod_gbps", "improvement"],

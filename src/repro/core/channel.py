@@ -227,6 +227,15 @@ TIER_PRESETS: dict[str, ChannelModel] = {
     "cxl": CXL_HOST,
 }
 
+#: Cross-device interconnect kinds. Collective traffic between mesh shards
+#: (``serve.shard.IciMeter``) is billed through these with the same
+#: ``offload.channel_time_us`` arithmetic as the DDR5/CXL host channels —
+#: per-link accounting only composes at scale if every link, including the
+#: chip-to-chip one, flows through the same channel model.
+INTERCONNECT_PRESETS: dict[str, ChannelModel] = {
+    "ici": ICI_LINK,
+}
+
 
 def parse_tier_spec(spec: str) -> list[tuple[str, ChannelModel]]:
     """Parse a ``kind:count,...`` channel-set spec into (kind, model) pairs.

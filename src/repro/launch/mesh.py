@@ -8,6 +8,8 @@ sees its 512 placeholder devices.
 
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -31,12 +33,39 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_debug_mesh(model: int = 1):
-    """A mesh over however many devices exist (CPU smoke / examples)."""
-    n = jax.device_count()
+def make_debug_mesh(model: int = 1, *, devices=None):
+    """A ``data × model`` mesh over however many devices exist.
+
+    ``devices`` pins an explicit device subset (tests use this to build
+    1/2/4-device meshes inside one forced-multi-device process); the
+    default is every device the backend exposes.
+
+    When the requested ``model`` axis does not divide the device count —
+    the classic single-device-CI trip, ``jax.device_count() == 1`` with
+    ``model > 1`` — this *falls back* to the largest model-axis size the
+    devices do support and says so, instead of raising an opaque
+    ``ValueError``.  Call sites therefore run unchanged on one device
+    and only actually shard under the forced-multi-device lane.
+    """
+    import numpy as np
+    from jax.sharding import Mesh
+
+    if model < 1:
+        raise ValueError(f"make_debug_mesh: model axis must be >= 1, "
+                         f"got model={model}")
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs)
     if n % model:
-        raise ValueError(f"{n} devices not divisible by model={model}")
-    return jax.make_mesh((n // model, model), ("data", "model"))
+        fallback = max(m for m in range(1, model + 1) if n % m == 0)
+        warnings.warn(
+            f"make_debug_mesh: {n} device(s) cannot host a model axis of "
+            f"{model} (not a divisor); falling back to model={fallback}. "
+            f"Set XLA_FLAGS=--xla_force_host_platform_device_count=<N> "
+            f"before importing jax to debug real sharding.",
+            RuntimeWarning, stacklevel=2)
+        model = fallback
+    return Mesh(np.asarray(devs).reshape(n // model, model),
+                ("data", "model"))
 
 
 def data_axes(mesh) -> tuple[str, ...]:

@@ -35,6 +35,22 @@ from repro.serve import (EngineConfig, EngineStallError, KVStoreTenant,
 KNOWN_TENANTS = ("redis", "vectordb")
 
 
+def _mesh_arg(value: str) -> tuple[int, int] | None:
+    """argparse type for --mesh: 'data,model' axis sizes (e.g. '2,2')."""
+    if not value:
+        return None
+    parts = value.split(",")
+    try:
+        data, model = (int(x) for x in parts)
+        if data < 1 or model < 1:
+            raise ValueError
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"--mesh wants two positive axis sizes 'data,model' "
+            f"(e.g. 2,2), got {value!r}") from None
+    return data, model
+
+
 def _tenants_arg(value: str) -> list[str]:
     """argparse type for --tenants: fail at parse time with the known
     names instead of deep in engine setup."""
@@ -135,6 +151,17 @@ def main() -> int:
                    help="consecutive zero-progress megastep boundaries "
                         "before run() raises EngineStallError naming "
                         "the stuck rids")
+    p.add_argument("--mesh", type=_mesh_arg, default=None,
+                   help="serve sharded over a data,model device mesh "
+                        "(axis sizes, e.g. 2,2): batch rows and KV pool "
+                        "shards split over data ranks, decode replicated "
+                        "over model ranks with modelled ICI collective "
+                        "billing. Needs data*model jax devices (CPU "
+                        "smoke: XLA_FLAGS=--xla_force_host_platform_"
+                        "device_count=N before launch)")
+    p.add_argument("--devices", type=int, default=0,
+                   help="use only the first N jax devices for --mesh "
+                        "(0 = however many the mesh needs)")
     p.add_argument("--no-paging", action="store_true",
                    help="disable the duplex KV pool (dense cache only)")
     p.add_argument("--no-warmup", action="store_true",
@@ -169,6 +196,19 @@ def main() -> int:
     if args.faults and args.no_paging:
         p.error("--faults targets the paged memory hierarchy; drop "
                 "--no-paging")
+    mesh = None
+    if args.mesh is not None:
+        from repro.launch.mesh import make_debug_mesh
+        data, model = args.mesh
+        avail = jax.devices()
+        if args.devices:
+            avail = avail[:args.devices]
+        if data * model > len(avail):
+            p.error(f"--mesh {data},{model} needs {data * model} devices "
+                    f"but only {len(avail)} are available; set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count="
+                    f"{data * model} for a CPU smoke")
+        mesh = make_debug_mesh(model, devices=avail[:data * model])
 
     def build_and_submit():
         # a FaultInjector is stateful (clock + retry RNG): each engine
@@ -179,7 +219,11 @@ def main() -> int:
             run_cfg = dataclasses.replace(cfg, faults=faults_lib.FaultInjector(
                 faults_lib.parse_fault_plan(args.faults),
                 seed=args.fault_seed))
-        engine = ServeEngine(api, params, run_cfg)
+        if mesh is not None:
+            from repro.serve.shard import ShardedServeEngine
+            engine = ShardedServeEngine(api, params, run_cfg, mesh=mesh)
+        else:
+            engine = ServeEngine(api, params, run_cfg)
         if "redis" in tenant_names:
             kv = engine.add_tenant(KVStoreTenant(
                 n_slots=2, ops_per_step=1, store_blocks=16))
@@ -267,6 +311,12 @@ def main() -> int:
         print(f"tiered host pool ({args.tiers}): "
               f"tier_speedup={ts['tier_speedup']:.2f}x vs all-DDR5 "
               f"serial, {ts['migrations']} boundary migrations")
+    if mesh is not None:
+        ici = engine.paging_stats().get("ici", {})
+        print(f"mesh {args.mesh[0]}x{args.mesh[1]} (data x model): "
+              f"{ici.get('bytes', 0) / 1e6:.2f} MB over ICI in "
+              f"{ici.get('collectives', 0)} collectives "
+              f"({ici.get('duplex_us', 0):.1f} us modelled)")
 
     def _round(v):
         if isinstance(v, float):
@@ -286,6 +336,8 @@ def main() -> int:
         "steps": int(engine.step_count),
         "megastep": args.megastep,
         "pipeline_depth": args.pipeline_depth,
+        "mesh": ({"data": args.mesh[0], "model": args.mesh[1]}
+                 if args.mesh else None),
         "host_dispatches": int(est["host_dispatches"]),
         "host_blocked": int(est["host_blocked"]),
         "wall_s": round(dt, 3),

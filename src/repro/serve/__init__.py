@@ -46,6 +46,8 @@ from repro.serve.engine import (EngineConfig, EngineStallError, ServeEngine,
                                 reference_decode)
 from repro.serve.kv_pool import PagedKVPool
 from repro.serve.queue import FAILED, Request, RequestQueue, TrafficProfile
+from repro.serve.shard import (IciMeter, ShardedKVPool, ShardedServeEngine,
+                               ShardFaultView)
 from repro.serve.tiers import TieredHostPool
 from repro.serve.workloads import (KVStoreTenant, VectorSearchTenant,
                                    WorkloadAPI)
@@ -56,11 +58,15 @@ __all__ = [
     "FAILED",
     "FaultEvent",
     "FaultInjector",
+    "IciMeter",
     "KVStoreTenant",
     "PagedKVPool",
     "Request",
     "RequestQueue",
     "ServeEngine",
+    "ShardFaultView",
+    "ShardedKVPool",
+    "ShardedServeEngine",
     "TieredHostPool",
     "TrafficProfile",
     "VectorSearchTenant",

@@ -318,20 +318,17 @@ def _written_of(dev):
 
 
 @functools.lru_cache(maxsize=64)
-def _fused_megastep_program(api: ModelAPI, n_micro: int, n_steps: int,
-                            block_tokens: int | None):
-    """Build the megastep program: ``n_steps`` consecutive engine steps
-    as ONE jitted, buffer-donated XLA program — an outer ``lax.scan``
-    over the fused engine step (itself a ``lax.scan`` of up to
-    ``n_micro`` micro-steps with on-device argmax feedback), per-slot
-    device state threaded through the carry.
-
-    Cached per (ModelAPI, prefill_chunk, K, block_tokens): every engine
-    sharing that cell reuses the compiled program (warm restarts, A/B
-    engines, the benchmark's warmup engine); ``run()`` quantizes its
-    adaptive K to powers of two so a serving run populates a handful of
-    cells, not one per gap length. Donating ``cache`` and the slot-state
-    arrays means the megastep updates in place — HBM holds one cache.
+def _megastep_math(api: ModelAPI, n_micro: int, n_steps: int,
+                   block_tokens: int | None):
+    """The megastep's pure math: ``n_steps`` consecutive engine steps
+    as one traceable function ``mega(params, cache, dev)`` — an outer
+    ``lax.scan`` over the fused engine step (itself a ``lax.scan`` of up
+    to ``n_micro`` micro-steps with on-device argmax feedback), per-slot
+    device state threaded through the carry. Un-jitted so callers choose
+    the staging: ``_fused_megastep_program`` jits it directly (the
+    single-device engine), ``serve.shard`` wraps it in ``shard_map``
+    over a data×model mesh first — every row's arithmetic is per-slot
+    independent, so the same math is bit-exact under batch sharding.
 
     Returns ``fn(params, cache, dev) -> (cache, dev, packed[, staged])``
     where ``packed`` is the (B, 3+K) int32 completion readback
@@ -451,7 +448,23 @@ def _fused_megastep_program(api: ModelAPI, n_micro: int, n_steps: int,
             return cache, dev, packed, ys[1]
         return cache, dev, packed
 
-    return jax.jit(mega, donate_argnums=(1, 2))
+    return mega
+
+
+@functools.lru_cache(maxsize=64)
+def _fused_megastep_program(api: ModelAPI, n_micro: int, n_steps: int,
+                            block_tokens: int | None):
+    """The single-device megastep program: ``_megastep_math`` compiled as
+    ONE jitted, buffer-donated XLA program. Cached per (ModelAPI,
+    prefill_chunk, K, block_tokens): every engine sharing that cell
+    reuses the compiled program (warm restarts, A/B engines, the
+    benchmark's warmup engine); ``run()`` quantizes its adaptive K to
+    powers of two so a serving run populates a handful of cells, not one
+    per gap length. Donating ``cache`` and the slot-state arrays means
+    the megastep updates in place — HBM holds one cache.
+    """
+    return jax.jit(_megastep_math(api, n_micro, n_steps, block_tokens),
+                   donate_argnums=(1, 2))
 
 
 class ServeEngine:
@@ -506,10 +519,7 @@ class ServeEngine:
         if self.paged:
             L, _, _, KV, hd = kv["k"].shape
             kv_dims = L * 2 * KV * hd
-            self.pool = PagedKVPool(
-                cfg.resolved_pool_blocks(), cfg.hbm_blocks,
-                (cfg.block_tokens, kv_dims), hints=self.hints,
-                tiers=cfg.tiers, faults=cfg.faults)
+            self.pool = self._make_pool((cfg.block_tokens, kv_dims))
             kv_bytes = float(kv_dims * 2)
         else:
             self.pool = None
@@ -542,6 +552,28 @@ class ServeEngine:
         # transaction, and the admission queue with LLM decode.
         self.tenants: dict[str, "object"] = {}
         self._reserved_blocks = 0   # HBM headroom promised to tenants
+
+    # -- sharding hooks (overridden by serve.shard.ShardedServeEngine) ------
+    def _make_pool(self, block_shape) -> PagedKVPool:
+        """Build the engine's KV pool; the sharded engine returns a
+        per-device-pool facade with the same interface instead."""
+        return PagedKVPool(
+            self.cfg.resolved_pool_blocks(), self.cfg.hbm_blocks,
+            block_shape, hints=self.hints, tiers=self.cfg.tiers,
+            faults=self.cfg.faults)
+
+    def _alloc_block(self, r: Request) -> list[int]:
+        """Allocate the next KV block for one request's fill. The sharded
+        engine routes this to the pool shard owning ``r.slot`` so slot
+        ownership (and later migration/evacuation) stays shard-local."""
+        return self.pool.alloc(1)
+
+    def _stage_view(self, staged):
+        """Adapt the megastep's staged write-through slab for the pool's
+        consumption (identity here; the sharded engine lands the
+        mesh-sharded slab on the pool device — a device-to-device copy,
+        never a host sync)."""
+        return staged
 
     # -- tenants -----------------------------------------------------------
     def add_tenant(self, workload):
@@ -676,6 +708,7 @@ class ServeEngine:
             out = self._mega_fn(k)(self.params, self.cache, self._dev)
             if self.paged:
                 self.cache, self._dev, rec.packed, staged = out
+                staged = self._stage_view(staged)
             else:
                 self.cache, self._dev, rec.packed = out
             self.host_dispatches += 1
@@ -1303,7 +1336,7 @@ class ServeEngine:
             n_filled = st.written // bt
             while len(r.blocks) < n_filled:
                 bi = len(r.blocks)
-                r.blocks.extend(self.pool.alloc(1))
+                r.blocks.extend(self._alloc_block(r))
                 journal.append(("alloc", r, [r.blocks[bi]]))
                 new_pairs.append((r, bi, bi - fill_base))
 

@@ -41,6 +41,14 @@ Everything here is host-side numpy metadata; the quantized block data
 stays in the pool's ``host_q``/``host_scale`` arrays, indexed by the
 global host-slot namespace this class owns (channel c's slots occupy
 ``[base[c], base[c] + cap[c])``).
+
+Under sharded serving (``serve.shard.ShardedKVPool``) each data rank's
+pool shard owns a *private* ``TieredHostPool`` built from the same tier
+spec — the physical picture of one DDR5+CXL expander set per device.
+Placement, idle-direction migrations and fault evacuation therefore
+never cross a shard boundary: channel ``c`` going offline fails every
+shard's channel ``c`` (the spec names a channel class, not one device's
+card), but each shard evacuates onto its *own* survivors.
 """
 
 from __future__ import annotations

@@ -390,6 +390,131 @@ class TestReclaimMigrationInterleave:
                                           oracle[i])
 
 
+class TestShardedChaos:
+    """Chaos cross-test with the sharded engine: seeded fault plans
+    replay bit-identically on a ``data × model`` mesh, poison routes to
+    the shard owning the block's global-id band, and an offline channel
+    evacuates on every shard WITHOUT any row crossing a shard boundary
+    (each shard's tables are local-id-sized, so ``check_invariants``
+    plus per-shard tier accounting pin it observably). Needs 4 forced
+    host devices; skips gracefully otherwise."""
+
+    def _serve_sharded(self, api, params, *, max_steps=600, **cfg_kw):
+        if jax.device_count() < 4:
+            pytest.skip("needs 4 devices (XLA_FLAGS="
+                        "--xla_force_host_platform_device_count=4)")
+        from repro.launch.mesh import make_debug_mesh
+        from repro.serve import ShardedServeEngine
+        # Pin to exactly 4 devices: the full suite may run with MORE
+        # forced host devices (the launch dry-run forces 512), and the
+        # data axis must divide max_batch=4.
+        eng = ShardedServeEngine(api, params,
+                                 _cfg(max_batch=4, **cfg_kw),
+                                 mesh=make_debug_mesh(
+                                     2, devices=jax.devices()[:4]))
+        prompts = jax.random.randint(jax.random.PRNGKey(77),
+                                     (N_REQ, PROMPT_LEN), 0,
+                                     api.cfg.vocab)
+        reqs = [eng.submit(np.asarray(prompts[i]), GEN,
+                           arrival_step=2 * i) for i in range(N_REQ)]
+        outs = eng.run(max_steps=max_steps)
+        return eng, reqs, outs
+
+    @staticmethod
+    def _signature(eng, reqs, outs):
+        """Everything a replay must reproduce bit-for-bit."""
+        toks = [np.asarray(outs[r.rid]).tolist() if r.rid in outs
+                else None for r in reqs]
+        timing = [(eng.completed[r.rid].admitted_step,
+                   eng.completed[r.rid].done_step)
+                  if r.rid in eng.completed else None for r in reqs]
+        errors = sorted(
+            (r.error["kind"], r.error.get("block", -1), r.error["step"])
+            for r in eng.failed.values())
+        return toks, timing, errors, dict(eng.stats()["faults"])
+
+    def test_seeded_plan_replays_bit_identical(self, api, params):
+        """Same plan + same injector seed => the sharded run reproduces
+        tokens, timing, structured errors and fault counters exactly."""
+        plan = ("transient:0@2+40=0.4,degrade:1@4+12=0.5,"
+                "poison:0@6,poison:1@7,offline:2@10")
+
+        def once():
+            fx = FaultInjector(parse_fault_plan(plan), seed=11)
+            eng, reqs, outs = self._serve_sharded(
+                api, params, faults=fx, tiers="ddr5:1,cxl:2")
+            eng.pool.check_invariants()
+            return self._signature(eng, reqs, outs)
+
+        assert once() == once()
+
+    def test_transients_bit_exact_with_oracle(self, api, params,
+                                              baseline):
+        """Transient retries on every shard's channels stay invisible
+        except in billed time: all four requests finish with the
+        fault-free oracle's tokens."""
+        oracle, _ = baseline
+        fx = FaultInjector(parse_fault_plan(
+            "transient:0@1+80=0.5,degrade:0@4+40=0.25"), seed=3)
+        eng, reqs, outs = self._serve_sharded(api, params, faults=fx)
+        _check_survivors(eng, reqs, outs, oracle, set())
+        assert not eng.failed
+        f = eng.stats()["faults"]
+        assert f["retried"] > 0 and f["recovered"] > 0
+        eng.pool.check_invariants()
+
+    def test_poison_routes_to_owning_shard(self, api, params, baseline):
+        """Poison aimed at shard 1's global-id band quarantines host
+        slots on shard 1 ONLY; shard 0's capacity and requests are
+        untouched, and every failed request was a shard-1 resident."""
+        oracle, _ = baseline
+        per = 24                                  # blocks per shard
+        fx = FaultInjector(parse_fault_plan(
+            f"poison:{per}@2,poison:{per + 1}@3,poison:{per + 2}@3"),
+            seed=0)
+        eng, reqs, outs = self._serve_sharded(
+            api, params, faults=fx, tiers="ddr5:1,cxl:2",
+            pool_blocks=per, hbm_blocks=4)
+        f = eng.stats()["faults"]
+        assert f["quarantined"] > 0
+        assert eng.failed
+        _check_survivors(eng, reqs, outs, oracle, {"poisoned_block"})
+        s0, s1 = eng.pool.shards
+        assert int(s0.host._quarantined.sum()) == 0
+        assert int(s1.host._quarantined.sum()) == f["quarantined"]
+        assert not s0.host.capacity_degraded
+        for fr in eng.failed.values():
+            assert fr.error["block"] >= per    # the poisoned band
+        eng.pool.check_invariants()
+
+    def test_offline_evacuation_stays_shard_local(self, api, params,
+                                                  baseline):
+        """Hot-unplug of tier channel 2: every shard loses ITS channel
+        2 and evacuates onto ITS survivors — the dead channel is empty
+        on both shards, each shard's migrated_out is accounted in its
+        own tier stats, and no shard's tables can name a foreign block
+        (they are local-id-sized; check_invariants re-proves the band)."""
+        oracle, _ = baseline
+        fx = FaultInjector(parse_fault_plan("offline:2@12"), seed=1)
+        eng, reqs, outs = self._serve_sharded(
+            api, params, faults=fx, tiers="ddr5:1,cxl:2",
+            pool_blocks=24, hbm_blocks=4)
+        f = eng.stats()["faults"]
+        assert f["offline_channels"] == [2]
+        assert f["evacuated"] > 0
+        _check_survivors(eng, reqs, outs, oracle,
+                         {"evacuation_casualty", "shed"})
+        migrated = 0
+        for sh in eng.pool.shards:
+            assert bool(sh.host.offline[2])
+            dead = sh.tier_stats()["channels"]["cxl:2"]
+            assert dead["offline"] and dead["slots_used"] == 0
+            migrated += dead["migrated_out"]
+        # all evacuation traffic is accounted inside the owning shards
+        assert migrated >= f["evacuated"]
+        eng.pool.check_invariants()
+
+
 try:        # the property runs hypothesis-driven when available and
     from hypothesis import HealthCheck, given, settings   # noqa: F401
     from hypothesis import strategies as st

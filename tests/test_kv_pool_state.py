@@ -7,6 +7,13 @@ family — and checks ``check_invariants()`` (slot-map bijections, HBM
 capacity, host-tier placement maps, per-channel free-list accounting)
 after every rule, plus the cheap semantic invariants the maps imply
 (dirty/has-host blocks are allocated, resident counts bounded).
+
+A second machine drives the same operation mix through the
+``ShardedKVPool`` facade in GLOBAL block ids — allocations targeted at
+random shards, frees/steps/writes spanning shard bands — and checks
+every shard's invariants plus the cross-shard ownership contract after
+every rule: shards' allocated sets stay disjoint in the global
+namespace, and no operation leaks state into a foreign shard's tables.
 """
 
 import numpy as np
@@ -21,6 +28,7 @@ import jax.numpy as jnp  # noqa: E402
 
 from repro.core.hints import HintTree, MemoryHint
 from repro.serve.kv_pool import PagedKVPool
+from repro.serve.shard import ShardedKVPool
 
 N_BLOCKS = 16
 HBM = 4
@@ -110,10 +118,101 @@ TestPoolStateMachine.settings = settings(
     max_examples=12, stateful_step_count=40, deadline=None)
 
 
+N_SHARDS = 2
+
+
+class ShardedPoolMachine(RuleBasedStateMachine):
+    """The same operation mix through the ``ShardedKVPool`` facade, in
+    global block ids, with ownership checked on every rule."""
+
+    @initialize(tiers=st.sampled_from([None, "ddr5:1,cxl:1",
+                                       "ddr5:2,cxl:2"]))
+    def setup(self, tiers):
+        self.pool = ShardedKVPool(N_SHARDS, N_BLOCKS, HBM, SHAPE,
+                                  hints=_tree(), tiers=tiers)
+
+    def _pick(self, seed: int, pop: np.ndarray, k: int) -> list[int]:
+        if pop.size == 0 or k <= 0:
+            return []
+        rng = np.random.default_rng(seed)
+        return rng.choice(pop, size=min(k, pop.size),
+                          replace=False).tolist()
+
+    def _allocated_global(self) -> np.ndarray:
+        return np.flatnonzero(self.pool._allocated)
+
+    @rule(shard=st.integers(0, N_SHARDS - 1), k=st.integers(1, 3))
+    def alloc(self, shard, k):
+        sh = self.pool.shards[shard]
+        if int((~sh._allocated).sum()) >= k:
+            ids = self.pool.alloc(k, shard=shard)
+            # allocation lands in the owning shard's global band only
+            assert all(self.pool.shard_of(b) == shard for b in ids)
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 4))
+    def free(self, seed, k):
+        self.pool.free(self._pick(seed, self._allocated_global(), k))
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 3))
+    def invalidate(self, seed, k):
+        self.pool.invalidate(
+            self._pick(seed, self._allocated_global(), k))
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, HBM),
+          scope=st.sampled_from(SCOPES))
+    def step(self, seed, k, scope):
+        # k <= HBM keeps every shard's routed share within its working
+        # set, however the global pick lands across the bands.
+        ids = self._pick(seed, self._allocated_global(), k)
+        if ids:
+            # a cross-shard demand group: the facade must split it
+            self.pool.step(ids, hint_path=scope)
+
+    @rule(seed=st.integers(0, 2**31 - 1), k=st.integers(1, HBM))
+    def write_resident(self, seed, k):
+        ids = self._pick(seed, self.pool.resident_blocks(), k)
+        if ids:
+            data = jnp.asarray(
+                np.random.default_rng(seed).standard_normal(
+                    (len(ids),) + SHAPE).astype(np.float32))
+            self.pool.write(np.asarray(ids, np.int32), data)
+
+    @rule(max_moves=st.integers(0, 4))
+    def migrate(self, max_moves):
+        self.pool.migrate_tiers(max_moves=max_moves)
+
+    @invariant()
+    def shards_consistent(self):
+        if not hasattr(self, "pool"):
+            return
+        # per-shard tables + cross-shard global-id disjointness
+        self.pool.check_invariants()
+        p = self.pool
+        for sh in p.shards:
+            assert len(sh.resident_blocks()) <= p.hbm_capacity
+            assert not (sh._dirty & ~sh._allocated).any()
+            assert not (sh._has_host & ~sh._allocated).any()
+        # the facade's global views are exactly the shard bands, in order
+        assert p._allocated.size == N_SHARDS * N_BLOCKS
+        assert len(p.resident_blocks()) <= N_SHARDS * p.hbm_capacity
+
+
+TestShardedPoolStateMachine = ShardedPoolMachine.TestCase
+TestShardedPoolStateMachine.settings = settings(
+    max_examples=10, stateful_step_count=40, deadline=None)
+
+
 def test_machine_smoke():
     """One deterministic pass so the machine's rules stay exercised even
     under a minimal hypothesis profile."""
     run_state_machine_as_test(
         PoolMachine,
+        settings=settings(max_examples=3, stateful_step_count=25,
+                          deadline=None))
+
+
+def test_sharded_machine_smoke():
+    run_state_machine_as_test(
+        ShardedPoolMachine,
         settings=settings(max_examples=3, stateful_step_count=25,
                           deadline=None))
