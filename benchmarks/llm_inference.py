@@ -156,11 +156,12 @@ def run(smoke: bool = False) -> Bench:
         section = f"llm_pipe{pipeline}"
     elif megastep != 8:
         section = f"llm_megastep{megastep}"
-    elif os.environ.get("REPRO_FAULTS") or os.environ.get("REPRO_SHARD"):
-        # the fault and shard smokes run in smoke mode at the default
-        # width: their fault-free single-device row must not clobber the
-        # full-mode "llm" baseline — only the "llm_faults"/"llm_shard<N>"
-        # sections below belong to them.
+    elif (os.environ.get("REPRO_FAULTS") or os.environ.get("REPRO_SHARD")
+          or os.environ.get("REPRO_SNAPSHOT")):
+        # the fault, shard, and snapshot smokes run in smoke mode at the
+        # default width: their fault-free single-device row must not
+        # clobber the full-mode "llm" baseline — only the "llm_faults"/
+        # "llm_shard<N>"/"llm_snapshot" sections below belong to them.
         section = None
     else:
         section = "llm"
@@ -213,6 +214,81 @@ def run(smoke: bool = False) -> Bench:
             "shed": int(f["shed"]),
             "failed_requests": len(fx_eng.failed),
             "retry_us": round(f["retry_us"], 3)})
+
+    # -- snapshot/restore smoke: REPRO_SNAPSHOT=1 measures the crash-
+    # consistency tax (tok/s with snapshot_every=8 cuts + WAL vs the
+    # disabled run above — the "llm_snapshot" BENCH schema: tokens_per_s
+    # is the snapshot-enabled number, overhead_frac the relative cost CI
+    # warns about above 5%), then kills a run at a fixed pool
+    # transaction, restores from the newest cut, and diffs the resumed
+    # transcript token-for-token against the uncrashed reference.
+    if os.environ.get("REPRO_SNAPSHOT"):
+        import shutil
+        import tempfile
+
+        from repro.core.faults import (CrashFault, FaultInjector,
+                                       parse_fault_plan)
+        snap_root = tempfile.mkdtemp(prefix="bench_snap_")
+        try:
+            scfg = dataclasses.replace(
+                ecfg, snapshot_every=8,
+                snapshot_dir=os.path.join(snap_root, "warm"))
+            _drive(ServeEngine(api_s, params, scfg))    # warm flush path
+            s_eng = ServeEngine(api_s, params, dataclasses.replace(
+                scfg, snapshot_dir=os.path.join(snap_root, "measure")))
+            outs_sn, dt_sn = _drive(s_eng)
+            for a, b_ in zip((outs[r] for r in sorted(outs)),
+                             (outs_sn[r] for r in sorted(outs_sn))):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b_))
+            snaps = s_eng.stats()["snapshot"]
+            assert snaps["snapshots_taken"] > 0, \
+                "snapshot smoke: no cuts taken"
+            tok_sn = sum(len(v) for v in outs_sn.values()) / dt_sn
+            overhead = max(0.0, 1.0 - tok_sn / tok_s) if tok_s else 0.0
+
+            # crash at a fixed transaction, restore, diff the transcript
+            crash_d = os.path.join(snap_root, "crash")
+            ccfg = dataclasses.replace(
+                ecfg, snapshot_every=2, snapshot_dir=crash_d,
+                faults=FaultInjector(parse_fault_plan("crash:@11")))
+            try:
+                _drive(ServeEngine(api_s, params, ccfg))
+                raise AssertionError("snapshot smoke: crash never fired")
+            except CrashFault:
+                pass
+            r_eng = ServeEngine(api_s, params, dataclasses.replace(
+                ccfg, faults=FaultInjector(parse_fault_plan("crash:@11"))))
+            info = r_eng.restore()
+            r_eng.run()
+            for a, b_ in zip((outs[r] for r in sorted(outs)),
+                             (r_eng.completed[r].generated
+                              for r in sorted(r_eng.completed))):
+                np.testing.assert_array_equal(np.asarray(a),
+                                              np.asarray(b_))
+            assert len(r_eng.completed) == len(outs), \
+                "snapshot smoke: restore lost requests"
+            b.row("decode/snapshot-restore", dt_sn * 1e6,
+                  f"every=8: {tok_sn:.0f} tok/s "
+                  f"({overhead:.1%} overhead vs disabled), "
+                  f"{snaps['snapshots_taken']} cuts/"
+                  f"{snaps['journal_entries']} journal entries; "
+                  f"crash@11 restored from cut {info['restored_step']}, "
+                  f"{info['pending_resubmits']} resubmits, transcript "
+                  f"bit-exact", provenance=ENGINE)
+            update_bench_json("llm_snapshot", {
+                "tokens_per_s": round(tok_sn, 1),
+                "tokens_per_s_disabled": round(tok_s, 1),
+                "overhead_frac": round(overhead, 4),
+                "snapshot_every": 8,
+                "snapshots_taken": int(snaps["snapshots_taken"]),
+                "journal_entries": int(snaps["journal_entries"]),
+                "restored_step": int(info["restored_step"]),
+                "restore_replayed": int(
+                    r_eng.stats()["snapshot"]["restore_replayed"]),
+                "restore_bit_exact": True})
+        finally:
+            shutil.rmtree(snap_root, ignore_errors=True)
 
     # -- sharded-serving smoke: REPRO_SHARD=<N> re-runs the serve row on
     # a data × model mesh over N (forced-host) devices and

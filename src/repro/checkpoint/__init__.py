@@ -1,3 +1,4 @@
 from repro.checkpoint.sharded import (
     CheckpointManager, save_checkpoint, load_checkpoint, latest_step,
+    encode_json, decode_json,
 )

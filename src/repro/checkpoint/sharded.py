@@ -54,6 +54,22 @@ def _decode_leaf(raw: np.ndarray, dtype_str: str) -> np.ndarray:
     return raw.view(dtype)
 
 
+def encode_json(obj) -> np.ndarray:
+    """Pack a JSON-serializable object into a uint8 leaf so non-array
+    state (request metadata, rng state, free-list order...) rides the
+    same sharded/sha256-verified npz path as tensor leaves — object
+    arrays would need pickle, which the manifest can't integrity-check
+    structurally. Keys are sorted so equal state encodes byte-equal."""
+    data = json.dumps(obj, sort_keys=True, separators=(",", ":"))
+    return np.frombuffer(data.encode("utf-8"), dtype=np.uint8).copy()
+
+
+def decode_json(arr: np.ndarray):
+    """Inverse of :func:`encode_json`."""
+    return json.loads(np.asarray(arr, dtype=np.uint8).tobytes().decode(
+        "utf-8"))
+
+
 def _leaf_paths(tree):
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["/".join(str(getattr(k, "key", k)) for k in path)

@@ -29,6 +29,12 @@ pipeline depths). Four fault kinds:
     live blocks are emergency-evacuated onto surviving channels via the
     migration path, and requests that no longer fit are shed.
 
+A fifth, unrecoverable kind — ``crash`` — models whole-process death:
+``tick()`` raises :class:`CrashFault` the instant the clock reaches the
+event, abandoning the engine mid-transaction (possibly mid-dispatch
+with a megastep in flight). Recovery goes through the snapshot/journal
+layer in ``serve/snapshot.py``, never through in-process handling.
+
 The injector is pure host-side bookkeeping: with no injector attached
 the pool/engine fault paths are never entered (zero-cost when
 disabled), and with one attached the only nondeterminism is the seeded
@@ -43,12 +49,39 @@ import numpy as np
 
 FAULT_KINDS = ("degrade", "transient", "poison", "offline")
 
+#: ``crash`` is deliberately not in the recoverable-kind default set:
+#: ``random_plan(kinds=FAULT_KINDS)`` schedules must stay survivable
+#: without a restore harness, and fixed-seed chaos tests depend on the
+#: default draw sequence. Pass ``kinds=ALL_FAULT_KINDS`` (or "crash"
+#: explicitly) to opt crashes into a generated plan.
+ALL_FAULT_KINDS = FAULT_KINDS + ("crash",)
+
 #: transient-retry policy: a failed transfer attempt is retried after an
 #: exponentially growing backoff, capped — both the attempt's transfer
 #: time and the backoff are billed into the channel's busy_us.
 MAX_ATTEMPTS = 6
 BACKOFF_BASE_US = 50.0
 BACKOFF_CAP_US = 800.0
+
+
+class CrashFault(RuntimeError):
+    """Simulated process death (``crash:@S``): raised from ``tick()`` the
+    moment the pool-transaction clock reaches the event's ``at_step``.
+
+    Because ``tick()`` runs inside the pool's paging transaction — which
+    at pipeline depth 2 runs inside ``_dispatch`` with a megastep already
+    in flight — the exception abandons the engine mid-boundary with
+    partial state, exactly like a SIGKILL. Nothing in the serving stack
+    catches it; recovery is only possible from the on-disk snapshot +
+    journal (``serve/snapshot.py``). ``at_step`` records which scheduled
+    event fired so a restore harness can disarm it (or keep only later
+    crashes) on the next attempt.
+    """
+
+    def __init__(self, at_step: int):
+        super().__init__(
+            f"simulated process crash at pool transaction {at_step}")
+        self.at_step = int(at_step)
 
 
 def fresh_fault_stats() -> dict:
@@ -78,15 +111,17 @@ class FaultEvent:
     duration: int = 0
 
     def __post_init__(self):
-        if self.kind not in FAULT_KINDS:
+        if self.kind not in ALL_FAULT_KINDS:
             raise ValueError(
                 f"unknown fault kind {self.kind!r}; known kinds: "
-                f"{','.join(FAULT_KINDS)}")
+                f"{','.join(ALL_FAULT_KINDS)}")
         if self.at_step < 0:
             raise ValueError("fault at_step must be >= 0")
         if self.kind == "poison":
             if self.block < 0:
                 raise ValueError("poison faults need a block id")
+        elif self.kind == "crash":
+            pass                          # process-level: no target
         elif self.channel < 0:
             raise ValueError(f"{self.kind} faults need a channel index")
         if self.kind == "degrade" and not 0.0 < self.factor <= 1.0:
@@ -130,6 +165,12 @@ class FaultInjector:
             self._cursor += 1
             until = (float("inf") if ev.duration <= 0
                      else self.step + ev.duration)
+            if ev.kind == "crash":
+                # Count the injection before dying so a post-mortem of
+                # the shared stats dict (snapshotted at the last cut)
+                # never double-counts on the restored run.
+                self.stats["injected"] += 1
+                raise CrashFault(ev.at_step)
             if ev.kind == "degrade":
                 self._degrade[ev.channel] = (ev.factor, until)
             elif ev.kind == "transient":
@@ -199,6 +240,23 @@ class FaultInjector:
     def rearm_poison(self, block: int) -> None:
         self._poison_armed.append(block)
 
+    # -- crash/restore ------------------------------------------------------
+    def disarm_crashes(self, after: int | None = None) -> int:
+        """Drop scheduled crash events — all of them, or (with ``after``)
+        only those with ``at_step <= after``. A restored engine calls
+        this so the death it just recovered from doesn't re-fire when
+        deterministic replay walks the clock back over ``at_step``; a
+        chaos harness that wants repeated crashes passes ``after`` (the
+        ``CrashFault.at_step`` it caught) to keep later ones live.
+        Returns the number of events removed."""
+        keep = [e for e in self.events
+                if e.kind != "crash"
+                or (after is not None and e.at_step > after)]
+        removed = len(self.events) - len(keep)
+        self.events = keep
+        self._cursor = sum(1 for e in keep if e.at_step <= self.step)
+        return removed
+
 
 def random_plan(seed: int, *, n_channels: int, n_blocks: int,
                 horizon: int, n_events: int = 4,
@@ -213,6 +271,9 @@ def random_plan(seed: int, *, n_channels: int, n_blocks: int,
     for _ in range(n_events):
         kind = str(rng.choice(list(kinds)))
         at = int(rng.integers(0, max(1, horizon)))
+        if kind == "crash":
+            events.append(FaultEvent("crash", at))
+            continue
         if kind == "poison":
             events.append(FaultEvent("poison", at,
                                      block=int(rng.integers(0, n_blocks))))
@@ -246,22 +307,32 @@ def parse_fault_plan(spec: str) -> list[FaultEvent]:
         poison:B@S             block B poisoned at transaction S
         degrade:C@S+D=F        channel C at F x bandwidth for D transactions
         transient:C@S+D=P      channel C fails attempts w.p. P for D
+        crash:@S               process death at transaction S (no target)
 
     e.g. ``"offline:2@40,poison:5@10,transient:0@5+20=0.3"``. Raises
     ``ValueError`` naming the grammar on any malformed entry, so CLI
     frontends can validate at argparse time.
     """
     usage = ("expected entries like 'offline:C@S', 'poison:B@S', "
-             "'degrade:C@S+D=F', 'transient:C@S+D=P'")
+             "'degrade:C@S+D=F', 'transient:C@S+D=P', 'crash:@S'")
     events: list[FaultEvent] = []
     for entry in (e.strip() for e in spec.split(",") if e.strip()):
         try:
             kind, _, rest = entry.partition(":")
-            if kind not in FAULT_KINDS:
+            if kind not in ALL_FAULT_KINDS:
                 raise ValueError(
                     f"unknown fault kind {kind!r} "
-                    f"(known: {','.join(FAULT_KINDS)})")
+                    f"(known: {','.join(ALL_FAULT_KINDS)})")
             target, _, when = rest.partition("@")
+            if kind == "crash":
+                if target:
+                    raise ValueError("crash is process-level — it takes "
+                                     "no target ('crash:@S')")
+                if "=" in when or "+" in when:
+                    raise ValueError("crash is instantaneous — it takes "
+                                     "no '+D' window or '=V' value")
+                events.append(FaultEvent("crash", int(when)))
+                continue
             target = int(target)
             value = None
             if "=" in when:

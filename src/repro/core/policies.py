@@ -499,6 +499,38 @@ def migration_volume(prev_w: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# state round-trip — snapshot/restore support for every registered policy.
+# ---------------------------------------------------------------------------
+
+def policy_state_leaves(state: Any) -> list[np.ndarray]:
+    """Flatten a policy state (any of the registry's shapes: ``()``,
+    scalar, NamedTuple-of-arrays) into host arrays for checkpointing.
+    Leaf order matches :func:`rebuild_policy_state`'s template flatten,
+    so a snapshot round-trips bit-exactly through the pair."""
+    return [np.asarray(leaf) for leaf in jax.tree.leaves(state)]
+
+
+def rebuild_policy_state(template: Any, leaves) -> Any:
+    """Rebuild a policy state from :func:`policy_state_leaves` output.
+
+    ``template`` is a freshly-initialized state of the same policy cell
+    (``policy.init(params, capacity)``) — it supplies the treedef and
+    per-leaf dtypes that the flat host arrays can't carry on their own
+    (checkpoint npz files round-trip values, not NamedTuple structure).
+    """
+    tpl_leaves, treedef = jax.tree.flatten(template)
+    if len(tpl_leaves) != len(leaves):
+        raise ValueError(
+            f"policy state arity mismatch: template has "
+            f"{len(tpl_leaves)} leaves, snapshot has {len(leaves)} — "
+            "was the engine restored with a different policy?")
+    rebuilt = [jnp.asarray(np.asarray(leaf).reshape(np.shape(tpl)),
+                           dtype=tpl.dtype)
+               for tpl, leaf in zip(tpl_leaves, leaves)]
+    return jax.tree.unflatten(treedef, rebuilt)
+
+
+# ---------------------------------------------------------------------------
 # megastep feedback aggregation — K per-step Feedbacks folded in one call.
 # ---------------------------------------------------------------------------
 

@@ -147,6 +147,19 @@ def main() -> int:
                         "paging; offline events require --tiers")
     p.add_argument("--fault-seed", type=int, default=0,
                    help="seed for the injector's transient-retry draws")
+    p.add_argument("--snapshot-dir", default=None,
+                   help="directory for crash-consistent engine snapshots "
+                        "+ the write-ahead journal (enables --restore "
+                        "after a crash)")
+    p.add_argument("--snapshot-every", type=int, default=0,
+                   help="take a consistent cut every N megasteps "
+                        "(0 = snapshots off; requires --snapshot-dir "
+                        "and paging)")
+    p.add_argument("--restore", action="store_true",
+                   help="resume from the newest valid snapshot in "
+                        "--snapshot-dir instead of submitting a fresh "
+                        "workload: journaled submits are replayed and "
+                        "the run continues bit-exactly")
     p.add_argument("--stall-boundaries", type=int, default=64,
                    help="consecutive zero-progress megastep boundaries "
                         "before run() raises EngineStallError naming "
@@ -187,15 +200,30 @@ def main() -> int:
         paging=not args.no_paging, megastep=args.megastep,
         tiers=args.tiers, tier_migrate=not args.no_tier_migrate,
         pipeline_depth=args.pipeline_depth,
-        stall_boundaries=args.stall_boundaries)
+        stall_boundaries=args.stall_boundaries,
+        snapshot_every=args.snapshot_every,
+        snapshot_dir=args.snapshot_dir)
     if tenant_names and args.no_paging:
         p.error("tenants serve from the paged pool; drop --no-paging")
+    if tenant_names and args.snapshot_every > 0:
+        p.error("snapshots cover the LLM serving state only; tenant op "
+                "streams are not crash-consistent — drop --tenants or "
+                "--snapshot-every")
     if args.tiers and args.no_paging:
         p.error("--tiers configures the paged pool's host side; drop "
                 "--no-paging")
     if args.faults and args.no_paging:
         p.error("--faults targets the paged memory hierarchy; drop "
                 "--no-paging")
+    if args.snapshot_every > 0 and not args.snapshot_dir:
+        p.error("--snapshot-every needs --snapshot-dir")
+    if args.snapshot_every > 0 and args.no_paging:
+        p.error("snapshots cover the paged memory hierarchy; drop "
+                "--no-paging")
+    if args.restore and not (args.snapshot_every > 0 and
+                             args.snapshot_dir):
+        p.error("--restore needs --snapshot-dir and --snapshot-every "
+                "matching the crashed run")
     mesh = None
     if args.mesh is not None:
         from repro.launch.mesh import make_debug_mesh
@@ -210,20 +238,35 @@ def main() -> int:
                     f"{data * model} for a CPU smoke")
         mesh = make_debug_mesh(model, devices=avail[:data * model])
 
-    def build_and_submit():
+    def build_and_submit(*, snapshots=True, submit=True):
         # a FaultInjector is stateful (clock + retry RNG): each engine
         # build gets a fresh one so warmup and the measured run replay
         # the identical fault schedule.
         run_cfg = cfg
+        if not snapshots and cfg.snapshot_every > 0:
+            # the warmup engine must never write into the measured
+            # run's snapshot directory
+            run_cfg = dataclasses.replace(run_cfg, snapshot_every=0,
+                                          snapshot_dir=None)
         if args.faults:
-            run_cfg = dataclasses.replace(cfg, faults=faults_lib.FaultInjector(
+            run_cfg = dataclasses.replace(run_cfg, faults=faults_lib.FaultInjector(
                 faults_lib.parse_fault_plan(args.faults),
                 seed=args.fault_seed))
+        elif args.restore:
+            # the snapshot may carry injector state (degraded/offline
+            # channels, armed poisons, the transaction clock): resume
+            # it into a fresh injector with no new events scheduled
+            run_cfg = dataclasses.replace(
+                run_cfg, faults=faults_lib.FaultInjector(
+                    [], seed=args.fault_seed))
         if mesh is not None:
             from repro.serve.shard import ShardedServeEngine
             engine = ShardedServeEngine(api, params, run_cfg, mesh=mesh)
         else:
             engine = ServeEngine(api, params, run_cfg)
+        if not submit:
+            # --restore: the workload comes from the snapshot + journal
+            return engine, []
         if "redis" in tenant_names:
             kv = engine.add_tenant(KVStoreTenant(
                 n_slots=2, ops_per_step=1, store_blocks=16))
@@ -245,11 +288,32 @@ def main() -> int:
                 arrival_step=i * args.arrival_every).rid)
         return engine, rids
 
+    def _snapshot_report() -> dict | None:
+        """What recovery has to work with: the newest cut that passes
+        its checksums and how much journal lies past it. ``resumable``
+        is the exit-code-3 contract — a later ``--restore`` with this
+        directory will resume from ``newest_valid``."""
+        if args.snapshot_every <= 0:
+            return None
+        from repro.serve.snapshot import (journal_length,
+                                          newest_valid_snapshot)
+        newest = newest_valid_snapshot(args.snapshot_dir)
+        return {
+            "dir": args.snapshot_dir,
+            "snapshot_every": args.snapshot_every,
+            "newest_valid": newest,
+            "journal_entries": (
+                journal_length(args.snapshot_dir, from_step=newest)
+                if newest is not None else 0),
+            "resumable": newest is not None,
+        }
+
     def _crash_report(engine, exc) -> dict:
         """Structured operator report for a run the engine could not
-        finish: exception identity, fault counters, and every failed
-        request's structured error (emitted as the process's last JSON
-        line before the nonzero exit)."""
+        finish: exception identity, fault counters, every failed
+        request's structured error, and (with snapshots enabled) the
+        recovery prospects (emitted as the process's last JSON line
+        before the nonzero exit)."""
         err = {
             "error": {"type": type(exc).__name__, "message": str(exc)},
             "arch": args.arch,
@@ -259,10 +323,17 @@ def main() -> int:
             "faults": engine.stats()["faults"],
             "failed_requests": {int(r.rid): r.error
                                 for r in engine.failed.values()},
+            "snapshot": _snapshot_report(),
         }
         if isinstance(exc, EngineStallError):
             err["error"]["stuck_rids"] = exc.rids
         return err
+
+    def _crash_exit(report: dict) -> int:
+        """3 = crashed but resumable (--restore will recover); 1 =
+        unrecoverable (no snapshots, or no cut survived intact)."""
+        snap = report.get("snapshot")
+        return 3 if snap and snap["resumable"] else 1
 
     if not args.no_warmup:
         # warmup mirrors the measured workload exactly, so every program
@@ -270,22 +341,41 @@ def main() -> int:
         # combo) is compiled once here and reused from the per-
         # (ModelAPI, config) program caches — the measured run below is
         # steady-state serving, not XLA compile time.
-        warm, _ = build_and_submit()
+        warm, _ = build_and_submit(snapshots=False)
+        if warm._fx is not None:
+            # warmup exists to compile programs, not to die: the crash
+            # events belong to the measured run's injector
+            warm._fx.disarm_crashes()
         try:
             warm.run()
         except (RuntimeError, ValueError) as e:
             print(json.dumps(_crash_report(warm, e)))
             return 1
-    engine, rids = build_and_submit()
+    restore_info = None
+    if args.restore:
+        engine, rids = build_and_submit(submit=False)
+        try:
+            restore_info = engine.restore()
+        except (OSError, ValueError, RuntimeError) as e:
+            print(json.dumps({
+                "error": {"type": type(e).__name__, "message": str(e)},
+                "snapshot": _snapshot_report(),
+            }))
+            return 1
+    else:
+        engine, rids = build_and_submit()
 
     t0 = time.monotonic()
     try:
         outs = engine.run()
     except (RuntimeError, ValueError) as e:
-        print(json.dumps(_crash_report(engine, e)))
-        return 1
+        report = _crash_report(engine, e)
+        print(json.dumps(report))
+        return _crash_exit(report)
     dt = time.monotonic() - t0
-    total_tokens = sum(len(outs[r]) for r in rids if r in outs)
+    total_tokens = (sum(len(outs[r]) for r in rids if r in outs)
+                    if not args.restore
+                    else sum(len(v) for v in outs.values()))
 
     est = engine.stats()
     print(f"served {args.requests} requests / {total_tokens} tokens in "
@@ -306,6 +396,16 @@ def main() -> int:
               f"recovered, {f['quarantined']} quarantined, "
               f"{f['evacuated']} evacuated, {f['shed']} shed, "
               f"{len(engine.failed)} failed requests")
+    if args.snapshot_every > 0:
+        s = est["snapshot"]
+        mode = (f"restored from cut {restore_info['restored_step']}, "
+                f"{restore_info['pending_resubmits']} journaled submits "
+                f"replayed, {restore_info['casualties']} casualties"
+                if restore_info is not None else
+                f"{s['snapshots_taken']} cuts taken")
+        print(f"snapshots (every {args.snapshot_every} megasteps -> "
+              f"{args.snapshot_dir}): {mode}, "
+              f"{s['journal_entries']} journal entries")
     if engine.paged and engine.pool.tiered:
         ts = engine.pool.tier_stats()
         print(f"tiered host pool ({args.tiers}): "
@@ -346,6 +446,8 @@ def main() -> int:
         "faults": _round(est["faults"]),
         "failed_requests": {int(r.rid): r.error
                             for r in engine.failed.values()},
+        "snapshot": _round(est["snapshot"]),
+        "restore": restore_info,
         "paging": _round(engine.paging_stats()),
     }
     print(json.dumps(report))

@@ -128,6 +128,7 @@ from repro.serve.kv_pool import PagedKVPool
 from repro.serve.queue import (DECODE, DONE, FAILED, PREFILL,
                                STATE_OF_CODE, Request, RequestQueue,
                                S_DECODE, S_DONE, S_EMPTY, S_PREFILL)
+from repro.serve.snapshot import SnapshotManager, fresh_snapshot_stats
 
 
 class EngineStallError(RuntimeError):
@@ -203,6 +204,12 @@ class EngineConfig:
                                 # machinery anywhere on the hot path.
     stall_boundaries: int = 64  # run(): consecutive zero-progress
                                 # boundaries before EngineStallError
+    snapshot_every: int = 0     # crash-consistent cut cadence in megastep
+                                # boundaries (serve.snapshot); 0 = disabled,
+                                # zero hooks anywhere on the hot path
+    snapshot_dir: str | None = None
+                                # snapshot + write-ahead-journal directory;
+                                # required when snapshot_every > 0
 
     def resolved_pool_blocks(self) -> int:
         if self.pool_blocks:
@@ -552,6 +559,20 @@ class ServeEngine:
         # transaction, and the admission queue with LLM decode.
         self.tenants: dict[str, "object"] = {}
         self._reserved_blocks = 0   # HBM headroom promised to tenants
+        # crash consistency (serve.snapshot): None when disabled — every
+        # hot-path hook is behind an ``is not None`` check, so a disabled
+        # engine runs bit-identically to one built before this layer.
+        self._snap = None
+        if cfg.snapshot_every > 0:
+            if cfg.snapshot_dir is None:
+                raise ValueError("snapshot_every > 0 needs snapshot_dir")
+            if not self.paged:
+                raise ValueError(
+                    "snapshot/restore covers the paged memory hierarchy; "
+                    "this engine has paging disabled (or a non-pageable "
+                    "cache family)")
+            self._snap = SnapshotManager(cfg.snapshot_dir,
+                                         cfg.snapshot_every)
 
     # -- sharding hooks (overridden by serve.shard.ShardedServeEngine) ------
     def _make_pool(self, block_shape) -> PagedKVPool:
@@ -574,6 +595,20 @@ class ServeEngine:
         mesh-sharded slab on the pool device — a device-to-device copy,
         never a host sync)."""
         return staged
+
+    def _place_device_state(self) -> None:
+        """Re-establish device placement of params/cache/_dev after a
+        snapshot restore rewrote them as host arrays. The flat engine
+        needs nothing — ``jnp.asarray`` already landed them on the
+        default device; the sharded engine re-runs its mesh placement."""
+
+    def _snapshot_extra_state(self) -> dict:
+        """Engine-subclass state for the snapshot tree (sharded engine:
+        ICI meter totals). Must be JSON-serializable."""
+        return {}
+
+    def _load_extra_state(self, extra: dict) -> None:
+        """Inverse of ``_snapshot_extra_state``."""
 
     # -- tenants -----------------------------------------------------------
     def add_tenant(self, workload):
@@ -632,7 +667,10 @@ class ServeEngine:
                     f"step but the pool holds {self.cfg.hbm_blocks} HBM "
                     f"blocks; grow hbm_blocks or shrink prefill_chunk/"
                     f"block_tokens")
-        return self.queue.submit(req)
+        self.queue.submit(req)
+        if self._snap is not None:
+            self._snap.note_submit(self, req)
+        return req
 
     def active(self) -> list[Request]:
         return [r for r in self.slots if r is not None]
@@ -859,6 +897,7 @@ class ServeEngine:
             # ahead of it — a pipeline bubble.
             self.host_blocked += 1
         advanced = 0
+        tok_pairs = [] if self._snap is not None else None
         if rec.live:
             rb = self._readback(rec.packed)
             try:
@@ -902,9 +941,16 @@ class ServeEngine:
                                     dev_ngen, toks)
                     advanced += ((last.consumed + last.n_gen) - (c0 + g0)
                                  - sum(st.transition for st in steps_r))
+                    if tok_pairs is not None and toks:
+                        tok_pairs.append((r.rid, toks))
             except RuntimeError:
                 self._rollback_speculation(rec)
                 raise
+        if self._snap is not None:
+            self._snap.note_boundary(
+                self, rec.now, rec.k,
+                [r.rid for r in rec.live
+                 if r.admitted_step == rec.now], tok_pairs)
         return {"step": rec.now, "steps": rec.k,
                 "admitted": rec.admitted, "advanced": advanced,
                 **rec.report}
@@ -1072,8 +1118,17 @@ class ServeEngine:
         done_steps = 0
         stall = 0
         while done_steps < limit:
+            if self._snap is not None:
+                # journaled resubmits due at this boundary come back
+                # BEFORE the pending() check — a restored engine whose
+                # cut had nothing live still owes them a replay.
+                self._snap.inject_resubmits(self)
             if not self.pending():
                 break
+            if self._snap is not None:
+                # crash-consistent cut if one is due (drains the
+                # pipeline; flushes dirty HBM through the billed path).
+                self._snap.maybe_cut(self)
             k = self._auto_megastep(limit - done_steps)
             rec = self._plan(k)
             self._dispatch(rec)
@@ -1444,7 +1499,40 @@ class ServeEngine:
                 "megasteps": self.megasteps,
                 "host_blocked": self.host_blocked,
                 "faults": (dict(self._fx.stats) if self._fx is not None
-                           else fresh_fault_stats())}
+                           else fresh_fault_stats()),
+                "snapshot": (dict(self._snap.stats)
+                             if self._snap is not None
+                             else fresh_snapshot_stats())}
+
+    def reset_stats(self) -> None:
+        """Zero the *counters* without touching the *clocks*:
+        ``step_count``/``megasteps`` keep running (determinism — the
+        snapshot journal, fault plan and admission timing key on them),
+        while dispatch/bubble counters, pool billing, fault stats and
+        snapshot stats restart. Benchmark plumbing for measuring a warm
+        window."""
+        self.host_dispatches = 0
+        self.host_blocked = 0
+        if self.paged:
+            self.pool.reset_stats()
+        if self._fx is not None:
+            self._fx.stats.clear()
+            self._fx.stats.update(fresh_fault_stats())
+        if self._snap is not None:
+            self._snap.reset_stats()
+
+    def restore(self, step: int | None = None, *,
+                disarm_crashes: bool = True) -> dict:
+        """Load the newest valid snapshot (or ``step``) from
+        ``cfg.snapshot_dir`` into this engine and arm deterministic
+        journal replay; the next ``run()`` resumes bit-exactly. Returns
+        the restore report (restored step, journal stats, casualties)."""
+        if self._snap is None:
+            raise ValueError(
+                "restore needs snapshots enabled (snapshot_every > 0 "
+                "and snapshot_dir)")
+        return self._snap.restore_into(self, step,
+                                       disarm=disarm_crashes)
 
     def paging_stats(self) -> dict:
         if not self.paged:

@@ -191,6 +191,12 @@ class IciMeter:
     def reset(self) -> None:
         self.by_path = {}
 
+    def snapshot_state(self) -> dict:
+        return {p: dict(st) for p, st in self.by_path.items()}
+
+    def load_state(self, state: dict) -> None:
+        self.by_path = {p: dict(st) for p, st in state.items()}
+
 
 # ---------------------------------------------------------------------------
 # Per-shard fault routing
@@ -474,6 +480,39 @@ class ShardedKVPool:
             moves += sh.migrate_tiers(max_moves)["migrations"]
         return {"migrations": moves}
 
+    # -- snapshot/restore ----------------------------------------------------
+    def flush_dirty(self, hint_path: str = "/serve/kv_cache") -> dict:
+        """Snapshot durability barrier, fanned out per shard. Each
+        shard's flush bills its own tier channels (the per-device
+        expander sets write in parallel, like everything else
+        shard-local), so the mesh-level flush time is the slowest
+        shard's, while ``page_outs`` counts all shards' traffic."""
+        report = {"page_outs": 0, "flush_us": 0.0}
+        for sh in self.shards:
+            r = sh.flush_dirty(hint_path)
+            report["page_outs"] += r["page_outs"]
+            report["flush_us"] = max(report["flush_us"], r["flush_us"])
+        return report
+
+    def snapshot_state(self) -> dict:
+        """Per-shard snapshot fan-out: one state sub-tree per shard plus
+        the facade's transaction counter. One manifest per mesh — the
+        caller persists this whole tree as a single checkpoint."""
+        state = {f"shard{s}": sh.snapshot_state()
+                 for s, sh in enumerate(self.shards)}
+        state["meta"] = {"steps": self._steps, "n_shards": self.n_shards}
+        return state
+
+    def load_state(self, state: dict) -> None:
+        meta = state["meta"]
+        if int(meta["n_shards"]) != self.n_shards:
+            raise ValueError(
+                f"pool snapshot has {meta['n_shards']} shards, mesh has "
+                f"{self.n_shards} — restore needs the crashed run's mesh")
+        for s, sh in enumerate(self.shards):
+            sh.load_state(state[f"shard{s}"])
+        self._steps = int(meta["steps"])
+
     # -- tenant-facing views (tenants pin to shard 0) ------------------------
     @property
     def hbm(self):
@@ -604,20 +643,7 @@ class ShardedServeEngine(ServeEngine):
         self.slots_per_shard = cfg.max_batch // self.data_size
         self._ici = IciMeter(mesh)
         super().__init__(api, params, cfg, hints)
-        # land the device state on the mesh: params replicated, cache
-        # leaves (L, B, ...) and slot-state leaves (B, ...) split over
-        # the data axis. The pool's own buffers stay on the default
-        # device (its kernels are per-shard host-modelled programs).
-        rep = NamedSharding(mesh, P())
-        row = NamedSharding(mesh, P("data"))
-        crow = NamedSharding(mesh, P(None, "data"))
-        self.params = jax.device_put(self.params, rep)
-        self.cache = jax.tree.map(
-            lambda x: jax.device_put(x, crow), self.cache)
-        self._cache0 = jax.tree.map(
-            lambda x: jax.device_put(x, crow), self._cache0)
-        self._dev = {k: jax.device_put(v, row)
-                     for k, v in self._dev.items()}
+        self._place_device_state()
         self._pool_device = next(iter(jax.devices()))
         # per-layer tensor-parallel psum payload (bf16 activations): the
         # launch.sharding row-parallel rules (attn/wo and mlp/w_down
@@ -630,6 +656,26 @@ class ShardedServeEngine(ServeEngine):
         self._tp_psum_bytes = float(self.slots_per_shard * d_model * 2)
 
     # -- sharding seams ------------------------------------------------------
+    def _place_device_state(self) -> None:
+        """Land the device state on the mesh: params replicated, cache
+        leaves (L, B, ...) and slot-state leaves (B, ...) split over
+        the data axis. The pool's own buffers stay on the default
+        device (its kernels are per-shard host-modelled programs).
+        Called at construction AND after a snapshot restore reloads
+        ``cache``/``_dev`` as host arrays — the placement seam the
+        restore path re-runs."""
+        mesh = self.mesh
+        rep = NamedSharding(mesh, P())
+        row = NamedSharding(mesh, P("data"))
+        crow = NamedSharding(mesh, P(None, "data"))
+        self.params = jax.device_put(self.params, rep)
+        self.cache = jax.tree.map(
+            lambda x: jax.device_put(x, crow), self.cache)
+        self._cache0 = jax.tree.map(
+            lambda x: jax.device_put(x, crow), self._cache0)
+        self._dev = {k: jax.device_put(v, row)
+                     for k, v in self._dev.items()}
+
     def _make_pool(self, block_shape) -> ShardedKVPool:
         return ShardedKVPool(
             self.data_size, self.cfg.resolved_pool_blocks(),
@@ -699,6 +745,13 @@ class ShardedServeEngine(ServeEngine):
                 shard_bytes = (rec.k * self.slots_per_shard * max_fills
                                * bt * kv_dims * 2)
                 self._ici.note_allgather("data", float(shard_bytes))
+
+    # -- snapshot seams ------------------------------------------------------
+    def _snapshot_extra_state(self) -> dict:
+        return {"ici": self._ici.snapshot_state()}
+
+    def _load_extra_state(self, extra: dict) -> None:
+        self._ici.load_state(extra.get("ici", {}))
 
     # -- reporting -----------------------------------------------------------
     def paging_stats(self) -> dict:

@@ -618,6 +618,56 @@ class TieredHostPool:
                 np.asarray(moved_src, np.int32),
                 np.asarray(moved_dst, np.int32), casualties)
 
+    # -- snapshot/restore ----------------------------------------------------
+    def snapshot_state(self) -> dict:
+        """Every mutable field, as checkpoint-ready values: placement
+        arrays are copied host arrays; the per-channel free stacks,
+        accounting totals, and WRR/window state go as JSON-able
+        structures. Free-stack *order* is serialized verbatim — ``place``
+        pops from the tail, so a reordered stack would place future
+        blocks on different slots and break bit-exact resume."""
+        return {
+            "slot_of": self.slot_of.copy(),
+            "block_of": self.block_of.copy(),
+            "pref": self.pref.copy(),
+            "wrr": self._wrr.copy(),
+            "win": self._win.copy(),
+            "offline": self.offline.copy(),
+            "quarantined": self._quarantined.copy(),
+            "lost": self._lost.copy(),
+            "meta": {
+                "free": [list(f) for f in self._free],
+                "totals": [dict(t) for t in self.totals],
+                "migrations": self.migrations,
+                "migrate_us": self.migrate_us,
+            },
+        }
+
+    def load_state(self, state: dict) -> None:
+        """Inverse of ``snapshot_state`` onto a pool built from the same
+        channel spec (static layout — cap/base/kinds — is derived from
+        config, not restored)."""
+        meta = state["meta"]
+        free = meta["free"]
+        if len(free) != len(self.channels):
+            raise ValueError(
+                f"tier snapshot has {len(free)} channels, pool has "
+                f"{len(self.channels)} — restore needs the same tier "
+                "spec the snapshot was taken under")
+        self.slot_of = np.asarray(state["slot_of"], np.int32).copy()
+        self.block_of = np.asarray(state["block_of"], np.int32).copy()
+        self.pref = np.asarray(state["pref"], np.int8).copy()
+        self._wrr = np.asarray(state["wrr"], np.float64).copy()
+        self._win = np.asarray(state["win"], np.float64).copy()
+        self.offline = np.asarray(state["offline"], bool).copy()
+        self._quarantined = np.asarray(state["quarantined"],
+                                       np.int64).copy()
+        self._lost = np.asarray(state["lost"], np.int64).copy()
+        self._free = [[int(s) for s in f] for f in free]
+        self.totals = [dict(t) for t in meta["totals"]]
+        self.migrations = int(meta["migrations"])
+        self.migrate_us = float(meta["migrate_us"])
+
     # -- reporting / invariants ----------------------------------------------
     def reset_stats(self) -> None:
         """Zero the per-channel accounting (totals, the boundary traffic

@@ -14,6 +14,12 @@ random shards, frees/steps/writes spanning shard bands — and checks
 every shard's invariants plus the cross-shard ownership contract after
 every rule: shards' allocated sets stay disjoint in the global
 namespace, and no operation leaks state into a foreign shard's tables.
+
+Both machines also carry a ``snapshot_roundtrip`` rule — the
+crash-consistency contract the serving cut relies on: flush the dirty
+blocks through the billed path, capture ``snapshot_state()``, mutate
+through public ops, then ``load_state()`` back and require every
+mutable field to reproduce bit-for-bit, at any reachable pool state.
 """
 
 import numpy as np
@@ -35,6 +41,22 @@ HBM = 4
 SHAPE = (4, 16)
 
 SCOPES = ["/t/mix", "/t/read", "/t/write", "/t/withdrawn"]
+
+
+def _assert_state_equal(a, b, path=""):
+    """Recursive bit-for-bit equality over snapshot_state() trees."""
+    if isinstance(a, dict):
+        assert isinstance(b, dict) and set(a) == set(b), path
+        for k in a:
+            _assert_state_equal(a[k], b[k], f"{path}/{k}")
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b), path
+        for i, (x, y) in enumerate(zip(a, b)):
+            _assert_state_equal(x, y, f"{path}[{i}]")
+    elif isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        assert np.array_equal(np.asarray(a), np.asarray(b)), path
+    else:
+        assert a == b, path
 
 
 def _tree() -> HintTree:
@@ -96,6 +118,20 @@ class PoolMachine(RuleBasedStateMachine):
     @rule(max_moves=st.integers(0, 4))
     def migrate(self, max_moves):
         self.pool.migrate_tiers(max_moves=max_moves)
+
+    @rule(seed=st.integers(0, 2**31 - 1))
+    def snapshot_roundtrip(self, seed):
+        self.pool.flush_dirty()
+        snap = self.pool.snapshot_state()
+        # mutate through public ops so the restore has work to undo
+        ids = self._pick(seed, np.flatnonzero(self.pool._allocated), 2)
+        if ids:
+            self.pool.step(ids, hint_path="/t/mix")
+            self.pool.free(ids[:1])
+        if int((~self.pool._allocated).sum()) > 0:
+            self.pool.alloc(1)
+        self.pool.load_state(snap)
+        _assert_state_equal(snap, self.pool.snapshot_state())
 
     @invariant()
     def maps_consistent(self):
@@ -180,6 +216,23 @@ class ShardedPoolMachine(RuleBasedStateMachine):
     @rule(max_moves=st.integers(0, 4))
     def migrate(self, max_moves):
         self.pool.migrate_tiers(max_moves=max_moves)
+
+    @rule(seed=st.integers(0, 2**31 - 1),
+          shard=st.integers(0, N_SHARDS - 1))
+    def snapshot_roundtrip(self, seed, shard):
+        """The facade's snapshot is per-shard state fanned into one
+        tree; restoring it must rebuild every shard bit-for-bit."""
+        self.pool.flush_dirty()
+        snap = self.pool.snapshot_state()
+        ids = self._pick(seed, self._allocated_global(), 2)
+        if ids:
+            self.pool.step(ids, hint_path="/t/mix")
+            self.pool.free(ids[:1])
+        sh = self.pool.shards[shard]
+        if int((~sh._allocated).sum()) > 0:
+            self.pool.alloc(1, shard=shard)
+        self.pool.load_state(snap)
+        _assert_state_equal(snap, self.pool.snapshot_state())
 
     @invariant()
     def shards_consistent(self):

@@ -170,7 +170,7 @@ class TestMegastepPerfContract:
         eng.run(max_steps=200)
         st = eng.stats()
         assert set(st) == {"steps", "host_dispatches", "megasteps",
-                           "host_blocked", "faults"}
+                           "host_blocked", "faults", "snapshot"}
         assert st["host_dispatches"] <= -(-st["steps"] // 2)
         assert st["host_dispatches"] == st["megasteps"]  # always live here
         # depth-1 blocks on every boundary's readback — the bubble count

@@ -1,0 +1,523 @@
+"""Crash-consistent serving: snapshot/restore with a write-ahead journal.
+
+Contract under test: a ``ServeEngine``/``ShardedServeEngine`` with
+``snapshot_every > 0`` takes consistent cuts at megastep boundaries
+(pipeline drained, dirty HBM flushed through the *billed* paging path)
+and journals boundary digests + post-cut submits between cuts. Killing
+the process at ANY pool transaction (``crash:@S``, including
+mid-dispatch at pipeline depth 2) and restoring into a fresh engine
+resumes **bit-exactly**: same tokens, same admission/completion step
+timing, same per-channel billing. Torn snapshots fall back to the
+previous valid cut (checksums, not hope); a truncated journal turns the
+submits past the tear into structured-error casualties instead of
+replaying an untrusted suffix; a disabled engine (``snapshot_every=0``)
+carries zero hooks and an all-zero ``stats()["snapshot"]`` schema.
+
+``REPRO_SOAK=1`` additionally runs the chaos soak: random fault plans
+mixing crash/restore cycles with degrade/transient/poison/offline,
+asserting survivor bit-exactness and pool invariants after every
+restore.
+"""
+
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.faults import (ALL_FAULT_KINDS, CrashFault, FAULT_KINDS,
+                               FaultEvent, FaultInjector, parse_fault_plan,
+                               random_plan)
+from repro.launch.mesh import make_debug_mesh
+from repro.models import registry as R
+from repro.serve import (EngineConfig, ServeEngine, ShardedServeEngine)
+from repro.serve.snapshot import (SnapshotError, fresh_snapshot_stats,
+                                  journal_length, newest_valid_snapshot)
+
+DEVICES = jax.device_count()
+N_REQ, PROMPT_LEN, GEN = 4, 6, 10
+
+
+@pytest.fixture(scope="module")
+def api():
+    return R.build("smollm-135m", smoke=True)
+
+
+@pytest.fixture(scope="module")
+def params(api):
+    return api.init(jax.random.PRNGKey(0))
+
+
+def _cfg(**kw):
+    base = dict(max_batch=3, cache_len=64, block_tokens=4, hbm_blocks=6,
+                prefill_chunk=3, max_queue=8, megastep=4,
+                pipeline_depth=2)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def _prompts(api, n=N_REQ):
+    return jax.random.randint(jax.random.PRNGKey(77), (n, PROMPT_LEN),
+                              0, api.cfg.vocab)
+
+
+def _submit_all(eng, api, n=N_REQ):
+    P = _prompts(api, n)
+    return [eng.submit(np.asarray(P[i]), GEN, arrival_step=2 * i)
+            for i in range(n)]
+
+
+_BILLING_KEYS = ("duplex_us", "serial_us", "page_ins", "page_outs",
+                 "kernel_calls")
+
+
+def _signature(eng):
+    """Everything a bit-exact resume must reproduce, keyed by
+    submission order (rids are globally monotonic across engines in one
+    process, so rid VALUES never join two engines — rid ORDER does).
+    Includes per-channel billing, not just totals."""
+    toks = [eng.completed[rid].generated for rid in sorted(eng.completed)]
+    timing = [(eng.completed[rid].admitted_step,
+               eng.completed[rid].done_step)
+              for rid in sorted(eng.completed)]
+    errors = sorted((r.error["kind"], r.error.get("block", -1))
+                    for r in eng.failed.values())
+    ps = eng.paging_stats()
+    billing = {k: ps.get(k) for k in _BILLING_KEYS}
+    billing["by_path"] = {
+        path: {k: st[k] for k in ("duplex_us", "serial_us")}
+        for path, st in ps["by_path"].items()}
+    if ps.get("tiers"):
+        billing["tiers"] = {
+            name: {k: ch[k] for k in ("busy_us", "read_bytes",
+                                      "write_bytes")}
+            for name, ch in ps["tiers"]["channels"].items()}
+    return toks, timing, errors, billing, dict(eng.stats()["faults"])
+
+
+def _crash_run(api, params, tmp, crash_at, *, every=2, **cfg_kw):
+    """Run the standard workload until ``crash:@crash_at`` kills it;
+    returns the snapshot directory (the engine object is process-dead)."""
+    d = str(tmp)
+    fx = FaultInjector(parse_fault_plan(f"crash:@{crash_at}"))
+    eng = ServeEngine(api, params, _cfg(snapshot_every=every,
+                                        snapshot_dir=d, faults=fx,
+                                        **cfg_kw))
+    _submit_all(eng, api)
+    with pytest.raises(CrashFault):
+        eng.run(max_steps=600)
+    return d
+
+
+class TestCrashGrammar:
+    def test_parse_crash(self):
+        (ev,) = parse_fault_plan("crash:@7")
+        assert (ev.kind, ev.at_step) == ("crash", 7)
+        assert "crash" in ALL_FAULT_KINDS
+        assert "crash" not in FAULT_KINDS   # not in the recoverable set
+
+    @pytest.mark.parametrize("bad", [
+        "crash:1@7",        # process-level: no target
+        "crash:@7+3",       # instantaneous: no duration
+        "crash:@7=0.5",     # no parameter
+    ])
+    def test_malformed_crash_raises(self, bad):
+        with pytest.raises(ValueError):
+            parse_fault_plan(bad)
+
+    def test_crash_raises_from_tick(self):
+        fx = FaultInjector(parse_fault_plan("crash:@2"))
+        fx.tick(); fx.tick()
+        with pytest.raises(CrashFault) as ei:
+            fx.tick()
+        assert ei.value.at_step == 2
+        assert fx.stats["injected"] == 1
+
+    def test_disarm_crashes(self):
+        fx = FaultInjector(parse_fault_plan("crash:@2,crash:@9,poison:0@4"))
+        assert fx.disarm_crashes(after=2) == 1      # drops only @2
+        assert sorted(e.at_step for e in fx.events
+                      if e.kind == "crash") == [9]
+        assert fx.disarm_crashes() == 1             # drops the rest
+        assert [e.kind for e in fx.events] == ["poison"]
+
+    def test_random_plan_can_schedule_crashes(self):
+        plan = random_plan(3, n_channels=3, n_blocks=16, horizon=30,
+                           n_events=12, kinds=ALL_FAULT_KINDS)
+        assert any(e.kind == "crash" for e in plan)
+
+
+class TestZeroCostDisabled:
+    def test_disabled_engine_has_no_hooks(self, api, params):
+        eng = ServeEngine(api, params, _cfg())
+        assert eng._snap is None
+        s = eng.stats()["snapshot"]
+        assert s == fresh_snapshot_stats()
+        assert all(v == 0 for v in s.values())
+
+    def test_enabled_requires_dir_and_paging(self, api, params, tmp_path):
+        with pytest.raises(ValueError, match="snapshot_dir"):
+            ServeEngine(api, params, _cfg(snapshot_every=2))
+        with pytest.raises(ValueError, match="paged"):
+            ServeEngine(api, params, _cfg(snapshot_every=2,
+                                          snapshot_dir=str(tmp_path),
+                                          paging=False))
+
+    def test_restore_requires_enabled(self, api, params):
+        eng = ServeEngine(api, params, _cfg())
+        with pytest.raises(ValueError, match="snapshot"):
+            eng.restore()
+
+    def test_disabled_bit_exact_with_enabled_tokens(self, api, params,
+                                                    tmp_path):
+        """Snapshots change *billing* (the flush is never free) but can
+        never change served tokens or admission timing."""
+        e0 = ServeEngine(api, params, _cfg())
+        _submit_all(e0, api)
+        e0.run(max_steps=600)
+        e1 = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=str(tmp_path)))
+        _submit_all(e1, api)
+        e1.run(max_steps=600)
+        t0, t1 = _signature(e0), _signature(e1)
+        assert t0[0] == t1[0] and t0[1] == t1[1]    # tokens + timing
+        assert e1.stats()["snapshot"]["snapshots_taken"] > 0
+
+
+class TestBitExactRestore:
+    @pytest.mark.parametrize("k,depth", [(1, 1), (4, 1), (4, 2), (8, 2)])
+    def test_crash_restore_bit_exact(self, api, params, tmp_path, k,
+                                     depth):
+        """Kill at a mid-run pool transaction (at depth 2 that is a
+        process death with a megastep still in flight), restore into a
+        fresh engine, and the completed run is indistinguishable from
+        the never-crashed one: tokens, timing, per-channel billing."""
+        cfg_kw = dict(megastep=k, pipeline_depth=depth)
+        ref = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector([]), **cfg_kw))
+        _submit_all(ref, api)
+        ref.run(max_steps=600)
+
+        d = _crash_run(api, params, tmp_path / "crash", 9, **cfg_kw)
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@9")), **cfg_kw))
+        info = eng.restore()
+        assert info["restored_step"] >= 0
+        eng.run(max_steps=600)
+        assert _signature(eng) == _signature(ref)
+        eng.pool.check_invariants()
+
+    def test_tiered_restore_bills_identically(self, api, params,
+                                              tmp_path):
+        """Tiered pools round-trip channel placement + per-channel
+        billing totals through the cut; the resumed run's tier billing
+        matches the uncrashed run's to the microsecond."""
+        cfg_kw = dict(tiers="ddr5:1,cxl:2")
+        ref = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector([]), **cfg_kw))
+        _submit_all(ref, api)
+        ref.run(max_steps=600)
+
+        d = _crash_run(api, params, tmp_path / "crash", 7, **cfg_kw)
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@7")), **cfg_kw))
+        eng.restore()
+        eng.run(max_steps=600)
+        assert _signature(eng) == _signature(ref)
+        eng.pool.check_invariants()
+
+    def test_segmented_runs_replay_journaled_submits(self, api, params,
+                                                     tmp_path):
+        """Submits landing between run() calls exist only in the
+        journal until the next cut; a crash right after them must
+        resubmit from the WAL (full prompt, same rid, same arrival)."""
+        P = _prompts(api, 6)
+
+        def drive(eng):
+            [eng.submit(np.asarray(P[i]), GEN, arrival_step=2 * i)
+             for i in range(4)]
+            eng.run(max_steps=600)
+            [eng.submit(np.asarray(P[i]), 8, arrival_step=eng.step_count)
+             for i in (4, 5)]
+            eng.run(max_steps=600)
+
+        ref = ServeEngine(api, params, _cfg(
+            snapshot_every=4, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector([])))
+        drive(ref)
+
+        d = str(tmp_path / "crash")
+        fx = FaultInjector(parse_fault_plan("crash:@24"))
+        eng = ServeEngine(api, params, _cfg(snapshot_every=4,
+                                            snapshot_dir=d, faults=fx))
+        with pytest.raises(CrashFault):
+            drive(eng)
+        # force the fallback past the newest cut so the second batch is
+        # journal-only: tear the newest snapshot
+        steps = sorted(int(p.rsplit("_", 1)[1])
+                       for p in glob.glob(d + "/step_*"))
+        with open(os.path.join(d, f"step_{steps[-1]:09d}",
+                               "shard_001.npz"), "r+b") as f:
+            f.seek(100)
+            f.write(b"\x00" * 64)
+        eng2 = ServeEngine(api, params, _cfg(
+            snapshot_every=4, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@24"))))
+        info = eng2.restore()
+        assert info["restored_step"] < steps[-1]
+        eng2.run(max_steps=600)
+        assert eng2.stats()["snapshot"]["resubmitted"] > 0
+        assert _signature(eng2) == _signature(ref)
+
+    def test_replay_is_verified_against_the_journal(self, api, params,
+                                                    tmp_path):
+        """Boundary records double as a replay oracle: resumed
+        boundaries are checked record-for-record, and a doctored
+        journal digest makes replay fail loudly instead of drifting."""
+        d = _crash_run(api, params, tmp_path, 15, every=4)
+        # tear the newest snapshot so replay has journaled boundaries
+        steps = sorted(int(p.rsplit("_", 1)[1])
+                       for p in glob.glob(d + "/step_*"))
+        with open(os.path.join(d, f"step_{steps[-1]:09d}",
+                               "shard_000.npz"), "r+b") as f:
+            f.seek(80)
+            f.write(b"\xff" * 32)
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=4, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@15"))))
+        info = eng.restore()
+        assert info["journal_entries"] > 0
+        eng.run(max_steps=600)
+        assert eng.stats()["snapshot"]["restore_replayed"] > 0
+
+
+class TestCorruptionRecovery:
+    def test_torn_snapshot_falls_back_to_previous_cut(self, api, params,
+                                                      tmp_path):
+        ref = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector([])))
+        _submit_all(ref, api)
+        ref.run(max_steps=600)
+
+        d = _crash_run(api, params, tmp_path / "crash", 9)
+        steps = sorted(int(p.rsplit("_", 1)[1])
+                       for p in glob.glob(d + "/step_*"))
+        newest = steps[-1]
+        with open(os.path.join(d, f"step_{newest:09d}", "shard_001.npz"),
+                  "r+b") as f:
+            f.seek(64)
+            f.write(b"\x00" * 64)
+        assert newest_valid_snapshot(d) < newest   # checksum caught it
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@9"))))
+        info = eng.restore()
+        assert info["restored_step"] < newest
+        eng.run(max_steps=600)
+        assert _signature(eng) == _signature(ref)
+
+    def test_truncated_journal_fails_requests_past_the_tear(
+            self, api, params, tmp_path):
+        """Submits after the first corrupt journal line are not a
+        trustworthy prefix of history: they become FAILED casualties
+        with structured errors, and every survivor is still bit-exact."""
+        P = _prompts(api, 6)
+
+        def drive(eng):
+            [eng.submit(np.asarray(P[i]), GEN, arrival_step=2 * i)
+             for i in range(4)]
+            eng.run(max_steps=600)
+            [eng.submit(np.asarray(P[i]), 8, arrival_step=eng.step_count)
+             for i in (4, 5)]
+            eng.run(max_steps=600)
+
+        ref = ServeEngine(api, params, _cfg(
+            snapshot_every=4, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector([])))
+        drive(ref)
+        ref_sig = _signature(ref)
+
+        d = str(tmp_path / "crash")
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=4, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@24"))))
+        with pytest.raises(CrashFault):
+            drive(eng)
+
+        # find the generation holding the second batch's submit records
+        # and corrupt the line right before them; tear newer snapshots
+        # so the fallback restores from before those submits.
+        tgt = idx = None
+        for j in sorted(glob.glob(d + "/journal-*.jsonl")):
+            lines = open(j).read().splitlines()
+            for i, line in enumerate(lines):
+                if json.loads(line[9:])["t"] == "s":
+                    tgt, idx = j, i
+                    break
+            if tgt:
+                break
+        assert tgt is not None and idx > 0
+        lines = open(tgt).read().splitlines()
+        lines[idx - 1] = lines[idx - 1][:-4] + "XXXX"
+        with open(tgt, "w") as f:
+            f.write("\n".join(lines) + "\n")
+        gen = int(os.path.basename(tgt)[len("journal-"):-len(".jsonl")])
+        for st in sorted(int(p.rsplit("_", 1)[1])
+                         for p in glob.glob(d + "/step_*")):
+            if st > gen:
+                with open(os.path.join(d, f"step_{st:09d}",
+                                       "shard_000.npz"), "r+b") as f:
+                    f.seek(50)
+                    f.write(b"\xff" * 32)
+
+        eng2 = ServeEngine(api, params, _cfg(
+            snapshot_every=4, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@24"))))
+        info = eng2.restore()
+        assert info["casualties"] == 2
+        eng2.run(max_steps=600)
+        cas = [r for r in eng2.failed.values()
+               if r.error["kind"] == "crash"]
+        assert len(cas) == 2
+        for r in cas:
+            assert r.error["step"] == info["restored_step"]
+            assert r.prompt.size > 0          # full prompt preserved
+        # survivors (the first batch) bit-exact with the reference
+        toks = [eng2.completed[rid].generated
+                for rid in sorted(eng2.completed)]
+        assert toks == ref_sig[0][:len(toks)]
+
+    def test_unrecoverable_directory_raises(self, api, params, tmp_path):
+        d = _crash_run(api, params, tmp_path, 9)
+        for p in glob.glob(d + "/step_*/shard_*.npz"):
+            with open(p, "r+b") as f:
+                f.seek(10)
+                f.write(b"\x00" * 32)
+        assert newest_valid_snapshot(d) is None
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@9"))))
+        with pytest.raises(IOError):
+            eng.restore()
+
+    def test_crash_report_helpers(self, api, params, tmp_path):
+        d = _crash_run(api, params, tmp_path, 9)
+        step = newest_valid_snapshot(d)
+        assert step is not None and step % 2 == 0
+        assert journal_length(d) >= journal_length(d, from_step=step) >= 0
+        assert newest_valid_snapshot(str(tmp_path / "nope")) is None
+        assert journal_length(str(tmp_path / "nope")) == 0
+
+
+class TestShardedRestore:
+    def _mesh(self, data, model):
+        need = data * model
+        if DEVICES < need:
+            pytest.skip(f"needs {need} devices (run under XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count=4)")
+        return make_debug_mesh(model, devices=jax.devices()[:need])
+
+    def test_mesh_crash_restore_bit_exact(self, api, params, tmp_path):
+        """(2, 2) mesh: per-shard pool state fans out into one manifest;
+        restore re-runs the mesh placement and resumes bit-exactly."""
+        mesh = self._mesh(2, 2)
+        cfg_kw = dict(max_batch=4)
+        ref = ShardedServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector([]), **cfg_kw), mesh=mesh)
+        _submit_all(ref, api)
+        ref.run(max_steps=600)
+
+        d = str(tmp_path / "crash")
+        fx = FaultInjector(parse_fault_plan("crash:@9"))
+        eng = ShardedServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d, faults=fx, **cfg_kw),
+            mesh=mesh)
+        _submit_all(eng, api)
+        with pytest.raises(CrashFault):
+            eng.run(max_steps=600)
+
+        eng2 = ShardedServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector(parse_fault_plan("crash:@9")), **cfg_kw),
+            mesh=mesh)
+        eng2.restore()
+        eng2.run(max_steps=600)
+        assert _signature(eng2) == _signature(ref)
+        eng2.pool.check_invariants()
+
+    def test_mesh_mismatch_rejected(self, api, params, tmp_path):
+        mesh = self._mesh(2, 1)
+        d = str(tmp_path)
+        fx = FaultInjector(parse_fault_plan("crash:@9"))
+        eng = ShardedServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d, faults=fx, max_batch=4),
+            mesh=mesh)
+        _submit_all(eng, api)
+        with pytest.raises(CrashFault):
+            eng.run(max_steps=600)
+        mesh1 = make_debug_mesh(1, devices=jax.devices()[:1])
+        eng2 = ShardedServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector([]), max_batch=4), mesh=mesh1)
+        with pytest.raises(ValueError, match="mesh"):
+            eng2.restore()
+
+
+@pytest.mark.skipif(os.environ.get("REPRO_SOAK") != "1",
+                    reason="chaos soak lane (REPRO_SOAK=1)")
+class TestChaosSoak:
+    """Random fault plans mixing crash/restore with the PR 7 fault
+    kinds: after every restore the pool invariants hold, and the final
+    survivors are bit-exact with the same plan minus its crashes."""
+
+    @pytest.mark.parametrize("seed", [0, 7, 1347])
+    def test_soak_crash_restore_cycles(self, api, params, tmp_path,
+                                       seed):
+        plan = random_plan(seed, n_channels=3, n_blocks=24, horizon=20,
+                           n_events=8, kinds=ALL_FAULT_KINDS)
+        calm = [e for e in plan if e.kind != "crash"]
+        cfg_kw = dict(tiers="ddr5:1,cxl:2")
+
+        ref = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=str(tmp_path / "ref"),
+            faults=FaultInjector(calm, seed=seed), **cfg_kw))
+        _submit_all(ref, api)
+        ref.run(max_steps=600)
+        ref.pool.check_invariants()
+
+        d = str(tmp_path / "soak")
+        eng = ServeEngine(api, params, _cfg(
+            snapshot_every=2, snapshot_dir=d,
+            faults=FaultInjector(plan, seed=seed), **cfg_kw))
+        _submit_all(eng, api)
+        restores = 0
+        while True:
+            try:
+                eng.run(max_steps=600)
+                break
+            except CrashFault as e:
+                restores += 1
+                assert restores <= len(plan) + 1
+                eng = ServeEngine(api, params, _cfg(
+                    snapshot_every=2, snapshot_dir=d,
+                    faults=FaultInjector(plan, seed=seed), **cfg_kw))
+                eng.restore(disarm_crashes=False)
+                # only the crash that just fired is disarmed — later
+                # crashes in the plan must still fire during replay.
+                eng._fx.disarm_crashes(after=e.at_step)
+                eng.pool.check_invariants()
+        if any(e.kind == "crash" for e in plan):
+            # at least the earliest reachable crash must have fired
+            # unless the run finished before its transaction.
+            first = min(e.at_step for e in plan if e.kind == "crash")
+            assert restores > 0 or eng._fx.step < first
+        assert _signature(eng) == _signature(ref)
+        eng.pool.check_invariants()
