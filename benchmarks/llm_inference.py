@@ -16,6 +16,7 @@ byte volumes (active params + KV per layer).
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
 
@@ -28,8 +29,8 @@ from repro.core.requests import StreamSpec
 from repro.models import registry as R
 from repro.serve import EngineConfig, ServeEngine
 
-from benchmarks.common import (ENGINE, SIM, Bench, update_bench_json,
-                               write_csv)
+from benchmarks.common import (ENGINE, SIM, Bench, out_dir,
+                               update_bench_json, write_csv)
 
 
 def _decode_specs(offered: float = 60.0, n: int = 8) -> list[StreamSpec]:
@@ -157,15 +158,31 @@ def run(smoke: bool = False) -> Bench:
     elif megastep != 8:
         section = f"llm_megastep{megastep}"
     elif (os.environ.get("REPRO_FAULTS") or os.environ.get("REPRO_SHARD")
-          or os.environ.get("REPRO_SNAPSHOT")):
-        # the fault, shard, and snapshot smokes run in smoke mode at the
-        # default width: their fault-free single-device row must not
+          or os.environ.get("REPRO_SNAPSHOT")
+          or os.environ.get("REPRO_TRACE")):
+        # the fault, shard, snapshot, and trace smokes run in smoke mode
+        # at the default width: their single-device untraced row must not
         # clobber the full-mode "llm" baseline — only the "llm_faults"/
-        # "llm_shard<N>"/"llm_snapshot" sections below belong to them.
+        # "llm_shard<N>"/"llm_snapshot"/"llm_trace" sections below belong
+        # to them.
         section = None
     else:
         section = "llm"
     if section is not None:
+        # traced twin: a non-measured re-run with the tracer attached
+        # supplies the per-phase boundary breakdown and the per-channel
+        # duplex utilization for the BENCH section; tokens are asserted
+        # bit-exact against the measured untraced run above — the
+        # benchmark-level echo of the zero-cost-when-disabled contract.
+        from repro.serve import Tracer
+        twin = Tracer()
+        t_eng = ServeEngine(api_s, params,
+                            dataclasses.replace(ecfg, trace=twin))
+        outs_t, _ = _drive(t_eng)
+        for a, b_ in zip((outs[r] for r in sorted(outs)),
+                         (outs_t[r] for r in sorted(outs_t))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+        phase = twin.phase_totals()
         update_bench_json(section, {
             "tokens_per_s": round(tok_s, 1),
             "steps": int(eng.step_count),
@@ -175,7 +192,11 @@ def run(smoke: bool = False) -> Bench:
             "host_blocked": int(st["host_blocked"]),
             "kernel_ceiling_tok_s": round(ceiling, 1),
             "roofline_frac": round(frac, 4),
-            "duplex_speedup": round(st["duplex_speedup"], 4)})
+            "duplex_speedup": round(st["duplex_speedup"], 4),
+            "phase_us": {k: round(phase.get(f"{k}_us", 0.0), 1)
+                         for k in ("plan", "dispatch", "reconcile")},
+            "duplex_util": {t: round(u["util"], 4)
+                            for t, u in twin.duplex_util().items()}})
 
     # -- fault-matrix smoke: REPRO_FAULTS=1 re-runs the serve row under
     # a transient + channel-offline + poisoned-block plan on a tiered
@@ -336,6 +357,67 @@ def run(smoke: bool = False) -> Bench:
             "ici_collectives": int(ici["collectives"]),
             "ici_duplex_us": round(ici["duplex_us"], 3),
             "ici_bytes_per_link": links})
+
+    # -- trace smoke: REPRO_TRACE=1 re-runs the serve row on a tiered
+    # pool twice — untraced baseline, then traced — asserts the traced
+    # run is token-bit-exact, exports the Perfetto trace next to the
+    # other bench artifacts, validates it (JSON loads; plan/dispatch/
+    # reconcile spans present; ddr5+cxl channel tracks present; every
+    # track's intervals monotonic and non-overlapping), and records the
+    # tracing overhead vs the untraced baseline in its own "llm_trace"
+    # section (CI warns above 3% on an unloaded runner).
+    if os.environ.get("REPRO_TRACE"):
+        from repro.serve import Tracer
+        tcfg = dataclasses.replace(ecfg, tiers="ddr5:1,cxl:2")
+        _drive(ServeEngine(api_s, params, tcfg))    # warm tiered paging
+        outs_u, dt_u = _drive(ServeEngine(api_s, params, tcfg))
+        trace_path = os.path.join(out_dir(), "llm_trace.json")
+        tr = Tracer(path=trace_path)
+        tr_eng = ServeEngine(api_s, params,
+                             dataclasses.replace(tcfg, trace=tr))
+        outs_tr, dt_tr = _drive(tr_eng)
+        for a, b_ in zip((outs_u[r] for r in sorted(outs_u)),
+                         (outs_tr[r] for r in sorted(outs_tr))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+        tr_eng.export_trace()
+        with open(trace_path) as f:
+            doc = json.load(f)
+        span_names = {e["name"] for e in doc["traceEvents"]
+                      if e.get("ph") == "X"}
+        assert {"plan", "dispatch", "reconcile"} <= span_names, span_names
+        tracks = sorted(tr.timelines)
+        assert any(t.startswith("ddr5:") for t in tracks), tracks
+        assert any(t.startswith("cxl:") for t in tracks), tracks
+        for ivs in tr.timelines.values():
+            end = 0.0
+            for iv_t0, iv_dur, _n, _a in ivs:
+                assert iv_t0 >= end - 1e-6, "overlapping trace intervals"
+                end = iv_t0 + iv_dur
+        tok_u = sum(len(v) for v in outs_u.values()) / dt_u
+        tok_tr = sum(len(v) for v in outs_tr.values()) / dt_tr
+        overhead_tr = max(0.0, 1.0 - tok_tr / tok_u) if tok_u else 0.0
+        phase_tr = tr.phase_totals()
+        util_tr = tr.duplex_util()
+        b.row("decode/trace", dt_tr * 1e6,
+              f"traced {tok_tr:.0f} vs untraced {tok_u:.0f} tok/s "
+              f"({overhead_tr:+.1%} overhead); "
+              f"{len(doc['traceEvents'])} events, {len(tracks)} channel "
+              f"tracks, plan {phase_tr.get('plan_us', 0.0):.0f}us / "
+              f"dispatch {phase_tr.get('dispatch_us', 0.0):.0f}us / "
+              f"reconcile {phase_tr.get('reconcile_us', 0.0):.0f}us; "
+              f"bit-exact with untraced", provenance=ENGINE)
+        update_bench_json("llm_trace", {
+            "tokens_per_s": round(tok_tr, 1),
+            "tokens_per_s_untraced": round(tok_u, 1),
+            "overhead_frac": round(overhead_tr, 4),
+            "trace_events": len(doc["traceEvents"]),
+            "channel_tracks": len(tracks),
+            "model_us": round(tr.model_us, 3),
+            "phase_us": {k: round(phase_tr.get(f"{k}_us", 0.0), 1)
+                         for k in ("plan", "dispatch", "reconcile")},
+            "duplex_util": {t: round(u["util"], 4)
+                            for t, u in util_tr.items()},
+            "trace_bit_exact": True})
 
     write_csv("fig6_llm.csv",
               ["phase", "cfs_gbps", "cxlaimpod_gbps", "improvement"],

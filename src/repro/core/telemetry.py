@@ -161,18 +161,34 @@ class CaxRegistry:
         emit(base)
         return "\n".join(lines)
 
-    def to_json(self) -> str:
-        return json.dumps({
+    def to_dict(self) -> dict:
+        """The scope tree as one JSON-able dict keyed by path (the
+        ``--telemetry`` report / ``ServeEngine.metrics()`` shape)."""
+        return {
             p: {
                 "type": c.ctx_type,
                 "read_bytes": c.read_bytes,
                 "write_bytes": c.write_bytes,
+                "read_fraction": round(c.read_fraction, 4),
                 "flops": c.flops,
                 "collective_bytes": c.collective_bytes,
                 "samples": c.samples,
             }
             for p, c in sorted(self._by_path.items())
-        }, indent=2)
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=2)
+
+    def reset(self) -> None:
+        """Zero every context's accumulators in place. Scope identity
+        (paths, ids, hierarchy) survives — attached producers keep
+        their references — only the measurements restart."""
+        for c in self._by_path.values():
+            c.read_bytes = c.write_bytes = 0.0
+            c.flops = c.collective_bytes = 0.0
+            c.samples = 0
+            c.last_update = 0.0
 
 
 # A process-wide default registry, like the kernel's single BPF map.

@@ -175,6 +175,17 @@ def main() -> int:
     p.add_argument("--devices", type=int, default=0,
                    help="use only the first N jax devices for --mesh "
                         "(0 = however many the mesh needs)")
+    p.add_argument("--trace", default=None, metavar="OUT.JSON",
+                   help="enable the serve.trace observability plane on "
+                        "the measured engine and export a Chrome/"
+                        "Perfetto trace (boundary spans on the host "
+                        "clock, per-channel duplex busy timelines on "
+                        "the modelled clock, fault instants) to this "
+                        "path; open at https://ui.perfetto.dev")
+    p.add_argument("--telemetry", action="store_true",
+                   help="include the CAX scope tree (read/write bytes "
+                        "+ read_fraction per /serve/... path) in the "
+                        "JSON report")
     p.add_argument("--no-paging", action="store_true",
                    help="disable the duplex KV pool (dense cache only)")
     p.add_argument("--no-warmup", action="store_true",
@@ -238,7 +249,7 @@ def main() -> int:
                     f"{data * model} for a CPU smoke")
         mesh = make_debug_mesh(model, devices=avail[:data * model])
 
-    def build_and_submit(*, snapshots=True, submit=True):
+    def build_and_submit(*, snapshots=True, submit=True, trace=True):
         # a FaultInjector is stateful (clock + retry RNG): each engine
         # build gets a fresh one so warmup and the measured run replay
         # the identical fault schedule.
@@ -248,6 +259,10 @@ def main() -> int:
             # run's snapshot directory
             run_cfg = dataclasses.replace(run_cfg, snapshot_every=0,
                                           snapshot_dir=None)
+        if args.trace and trace:
+            # measured engine only: the warmup run's spans and channel
+            # intervals would pollute the exported timeline.
+            run_cfg = dataclasses.replace(run_cfg, trace=args.trace)
         if args.faults:
             run_cfg = dataclasses.replace(run_cfg, faults=faults_lib.FaultInjector(
                 faults_lib.parse_fault_plan(args.faults),
@@ -341,7 +356,7 @@ def main() -> int:
         # combo) is compiled once here and reused from the per-
         # (ModelAPI, config) program caches — the measured run below is
         # steady-state serving, not XLA compile time.
-        warm, _ = build_and_submit(snapshots=False)
+        warm, _ = build_and_submit(snapshots=False, trace=False)
         if warm._fx is not None:
             # warmup exists to compile programs, not to die: the crash
             # events belong to the measured run's injector
@@ -417,6 +432,19 @@ def main() -> int:
               f"{ici.get('bytes', 0) / 1e6:.2f} MB over ICI in "
               f"{ici.get('collectives', 0)} collectives "
               f"({ici.get('duplex_us', 0):.1f} us modelled)")
+    trace_info = None
+    if args.trace:
+        trace_path = engine.export_trace()
+        summary = engine.tracer.summary()
+        trace_info = {"path": trace_path, **summary}
+        ph = summary["phase_us"]
+        print(f"trace -> {trace_path}: "
+              f"plan {ph.get('plan_us', 0.0):.0f}us / dispatch "
+              f"{ph.get('dispatch_us', 0.0):.0f}us / reconcile "
+              f"{ph.get('reconcile_us', 0.0):.0f}us host-clock, "
+              f"{summary['events']} events over "
+              f"{len(summary['duplex_util'])} channel tracks "
+              f"({summary['model_us']:.1f}us modelled)")
 
     def _round(v):
         if isinstance(v, float):
@@ -449,7 +477,10 @@ def main() -> int:
         "snapshot": _round(est["snapshot"]),
         "restore": restore_info,
         "paging": _round(engine.paging_stats()),
+        "trace": _round(trace_info) if trace_info else None,
     }
+    if args.telemetry:
+        report["telemetry"] = _round(engine.telemetry.to_dict())
     print(json.dumps(report))
 
     if args.offload_demo:

@@ -30,6 +30,12 @@ The serving stack, layered (see README.md):
                   t+1 is planned and dispatched before t's deferred
                   readback is reconciled, with journaled rollback of
                   speculative pool mutations on divergence.
+  Tracer        — the observability plane (``EngineConfig(trace=...)``):
+                  boundary spans on the host clock, per-channel
+                  per-direction busy timelines on the modelled billing
+                  clock, fault instants, and a Chrome/Perfetto
+                  ``trace.json`` exporter. Disabled = None = zero cost,
+                  bit-exact with an untraced engine.
   FaultInjector — deterministic fault plans (channel degradation,
                   transient transfer errors, poisoned host blocks,
                   channel hot-unplug) serviced once per pool
@@ -49,6 +55,7 @@ from repro.serve.queue import FAILED, Request, RequestQueue, TrafficProfile
 from repro.serve.shard import (IciMeter, ShardedKVPool, ShardedServeEngine,
                                ShardFaultView)
 from repro.serve.tiers import TieredHostPool
+from repro.serve.trace import Tracer
 from repro.serve.workloads import (KVStoreTenant, VectorSearchTenant,
                                    WorkloadAPI)
 
@@ -68,6 +75,7 @@ __all__ = [
     "ShardedKVPool",
     "ShardedServeEngine",
     "TieredHostPool",
+    "Tracer",
     "TrafficProfile",
     "VectorSearchTenant",
     "WorkloadAPI",

@@ -123,12 +123,15 @@ from jax import lax
 from repro.core import policies as policies_lib
 from repro.core.faults import fresh_fault_stats
 from repro.core.hints import HintTree, default_serving_hints
+from repro.core.metrics import MetricsRegistry
+from repro.core.telemetry import CaxRegistry
 from repro.models.registry import ModelAPI
 from repro.serve.kv_pool import PagedKVPool
 from repro.serve.queue import (DECODE, DONE, FAILED, PREFILL,
                                STATE_OF_CODE, Request, RequestQueue,
                                S_DECODE, S_DONE, S_EMPTY, S_PREFILL)
 from repro.serve.snapshot import SnapshotManager, fresh_snapshot_stats
+from repro.serve.trace import Tracer
 
 
 class EngineStallError(RuntimeError):
@@ -210,6 +213,11 @@ class EngineConfig:
     snapshot_dir: str | None = None
                                 # snapshot + write-ahead-journal directory;
                                 # required when snapshot_every > 0
+    trace: object = None        # observability plane (serve.trace): a
+                                # Tracer, True (in-memory), or a path str
+                                # for Perfetto export. None = disabled,
+                                # zero hooks anywhere on the hot path and
+                                # bit-exact with an untraced engine.
 
     def resolved_pool_blocks(self) -> int:
         if self.pool_blocks:
@@ -573,6 +581,27 @@ class ServeEngine:
                     "cache family)")
             self._snap = SnapshotManager(cfg.snapshot_dir,
                                          cfg.snapshot_every)
+        # observability (serve.trace / core.telemetry): the tracer is
+        # None when disabled — same zero-cost contract as faults and
+        # snapshots above. The CAX scope registry is per-engine and
+        # always wired (host-side dict arithmetic off billing the pool
+        # already does; it never touches tokens, timing, or a device
+        # array) so ``--telemetry`` needs no mode flag.
+        self.telemetry = CaxRegistry()
+        if cfg.trace is None:
+            self._tracer = None
+        elif isinstance(cfg.trace, Tracer):
+            self._tracer = cfg.trace
+        elif cfg.trace is True:
+            self._tracer = Tracer()
+        else:
+            self._tracer = Tracer(path=str(cfg.trace))
+        if self.paged:
+            self.pool.attach_telemetry(self.telemetry)
+            if self._tracer is not None:
+                self.pool.attach_trace(self._tracer)
+        if self._fx is not None:
+            self._fx.trace = self._tracer
 
     # -- sharding hooks (overridden by serve.shard.ShardedServeEngine) ------
     def _make_pool(self, block_shape) -> PagedKVPool:
@@ -722,11 +751,15 @@ class ServeEngine:
         view of the request mirrors (``Request.plan_*``: identical to
         the real mirrors at depth 1, one dispatched-but-unreconciled
         boundary ahead of them at depth 2). No device sync."""
+        t0 = self._tracer.now_us() if self._tracer is not None else 0.0
         k = int(n_steps) if n_steps else max(1, self.cfg.megastep)
         now = self.step_count
         admitted = self._admit(now)
         live = self.active()
         traj = {r.rid: self._simulate_row(r, k) for r in live}
+        if self._tracer is not None:
+            self._tracer.span("plan", t0, step=now, k=k,
+                              admitted=admitted, live=len(live))
         return _InFlight(now=now, k=k, admitted=admitted, live=live,
                          traj=traj)
 
@@ -740,6 +773,7 @@ class ServeEngine:
         (speculative mirrors, trajectory-driven retirement, step
         counters), and every pool alloc/free is journaled on ``rec`` so
         a later divergence can roll it back."""
+        t0 = self._tracer.now_us() if self._tracer is not None else 0.0
         now, k, live, traj = rec.now, rec.k, rec.live, rec.traj
         staged = None
         if live:
@@ -854,6 +888,13 @@ class ServeEngine:
         self.step_count += k
         self.megasteps += 1
         self._inflight.append(rec)
+        if self._tracer is not None:
+            self._tracer.span(
+                "dispatch", t0, step=now, k=k, live=len(live),
+                in_flight=len(self._inflight),
+                page_ins=report["page_ins"], page_outs=report["page_outs"],
+                migrations=report["migrations"])
+            self._tracer.counter("in_flight", len(self._inflight))
         return rec
 
     def _retire_planned(self, rec: _InFlight) -> int:
@@ -891,8 +932,10 @@ class ServeEngine:
         at depth 2 it runs one boundary late, with t+1 already in
         flight. A readback that contradicts its trajectory rolls back
         every speculative pool mutation before raising."""
+        t0 = self._tracer.now_us() if self._tracer is not None else 0.0
         self._inflight.remove(rec)
-        if rec.live and not self._inflight:
+        bubble = bool(rec.live and not self._inflight)
+        if bubble:
             # the host blocks on this readback with nothing dispatched
             # ahead of it — a pipeline bubble.
             self.host_blocked += 1
@@ -944,6 +987,10 @@ class ServeEngine:
                     if tok_pairs is not None and toks:
                         tok_pairs.append((r.rid, toks))
             except RuntimeError:
+                if self._tracer is not None:
+                    self._tracer.instant(
+                        "engine", "divergence_rollback",
+                        {"step": rec.now, "k": rec.k}, clock="host")
                 self._rollback_speculation(rec)
                 raise
         if self._snap is not None:
@@ -951,6 +998,9 @@ class ServeEngine:
                 self, rec.now, rec.k,
                 [r.rid for r in rec.live
                  if r.admitted_step == rec.now], tok_pairs)
+        if self._tracer is not None:
+            self._tracer.span("reconcile", t0, step=rec.now, k=rec.k,
+                              host_blocked=bubble, advanced=advanced)
         return {"step": rec.now, "steps": rec.k,
                 "admitted": rec.admitted, "advanced": advanced,
                 **rec.report}
@@ -1020,6 +1070,10 @@ class ServeEngine:
         self.failed[r.rid] = r
         if self._fx is not None:
             self._fx.stats["failed"] += 1
+        if self._tracer is not None:
+            self._tracer.instant(
+                "faults", "request_failed",
+                {"rid": r.rid, "kind": error.get("kind")})
 
     def _service_fault_report(self, rep: dict, step_now: int,
                               rec: _InFlight) -> None:
@@ -1520,6 +1574,7 @@ class ServeEngine:
             self._fx.stats.update(fresh_fault_stats())
         if self._snap is not None:
             self._snap.reset_stats()
+        self.telemetry.reset()
 
     def restore(self, step: int | None = None, *,
                 disarm_crashes: bool = True) -> dict:
@@ -1543,9 +1598,11 @@ class ServeEngine:
         stats = {"paged": True, **self.pool.stats,
                  "paging_steps": self.pool.stats["steps"], **self.stats(),
                  "duplex_speedup": self.pool.duplex_speedup()}
-        if self.pool.tiered:
-            stats["tiers"] = self.pool.tier_stats()
-            stats["tier_speedup"] = self.pool.tier_speedup()
+        # unified schema (core.metrics): tiers/tier_speedup are ALWAYS
+        # present — flat pools report their single channel with the
+        # tier fields zeroed, so consumers never key-guard.
+        stats["tiers"] = self.pool.tier_stats()
+        stats["tier_speedup"] = self.pool.tier_speedup()
         stats["by_path"] = {
             path: {**st, "duplex_speedup": self.pool.duplex_speedup(path)}
             for path, st in self.pool.stats["by_path"].items()}
@@ -1553,6 +1610,34 @@ class ServeEngine:
             stats["tenants"] = {t.name: t.stats()
                                 for t in self.tenants.values()}
         return stats
+
+    @property
+    def tracer(self):
+        """The engine's ``serve.trace.Tracer`` (None when disabled)."""
+        return self._tracer
+
+    def export_trace(self, path: str | None = None) -> str:
+        """Write the Perfetto trace; needs ``cfg.trace`` enabled."""
+        if self._tracer is None:
+            raise ValueError("tracing is disabled; build the engine "
+                             "with EngineConfig(trace=...)")
+        return self._tracer.export(path)
+
+    def metrics(self):
+        """One typed ``core.metrics.MetricsRegistry`` snapshot of the
+        whole engine: stats()/paging_stats() flattened into counters
+        and gauges, the tracer's span histograms (when tracing), and
+        the CAX scope tree under ``"cax"`` — the unified view BENCH,
+        ``--telemetry`` and a future cluster router all read."""
+        reg = MetricsRegistry()
+        reg.ingest("engine", self.paging_stats())
+        snap = reg.snapshot()
+        if self._tracer is not None:
+            snap["trace"] = self._tracer.summary()
+            snap["histograms"].update(
+                self._tracer.metrics.snapshot()["histograms"])
+        snap["cax"] = self.telemetry.to_dict()
+        return snap
 
 
 def reference_decode(api: ModelAPI, params, prompts: jnp.ndarray,

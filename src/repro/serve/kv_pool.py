@@ -37,7 +37,8 @@ import numpy as np
 
 from repro.core import channel as channel_lib
 from repro.core.hints import HintTree, default_serving_hints
-from repro.core.offload import DuplexOffloadEngine, plan_serial
+from repro.core.offload import (DuplexOffloadEngine,
+                                phase_separated_time_us, plan_serial)
 from repro.kernels import ops as kernel_ops
 from repro.serve.tiers import TieredHostPool
 
@@ -204,6 +205,10 @@ class PagedKVPool:
         self._fx = faults
         self._csum_data = self._csum_stamp = None
         self._stamp = 0
+        # observability: None/absent until the engine attaches them —
+        # same zero-cost-when-disabled contract as the fault layer.
+        self._trace = None
+        self._trace_prefix = ""
         if faults is not None:
             self.host.attach_faults(faults)
             # per-block host-copy checksums, stamped at page-out and
@@ -211,6 +216,57 @@ class PagedKVPool:
             # so the verify mismatches, exactly like a real CRC).
             self._csum_data = np.zeros((n_blocks,), np.int64)
             self._csum_stamp = np.zeros((n_blocks,), np.int64)
+
+    # -- observability -----------------------------------------------------
+    def attach_trace(self, tracer, prefix: str = "") -> None:
+        """Attach a ``serve.trace.Tracer``: every billed transaction
+        (paging, migrations, evacuations, flushes) additionally lays
+        per-channel per-direction busy intervals on its modelled clock.
+        ``prefix`` namespaces the channel tracks (pool shards)."""
+        self._trace = tracer
+        self._trace_prefix = prefix
+        self.host.attach_trace(tracer, prefix)
+
+    def attach_telemetry(self, registry) -> None:
+        """Route CAX scope attribution (``core.telemetry``) into
+        ``registry``: the flat planner records through the offload
+        engine; the tiered hot path (which skips plan construction)
+        attributes its byte volumes directly."""
+        self.engine.telemetry = registry
+
+    def _flat_bill_totals(self, read_blocks: int, write_blocks: int,
+                          busy_us: float) -> None:
+        """Mirror one flat-pool transaction into the single channel's
+        per-channel totals so ``tier_stats()`` reports the same shape
+        (and real traffic) for both pool flavors. The tiered path does
+        this inside ``bill_transaction``."""
+        t = self.host.totals[0]
+        bb = self.host.block_bytes
+        t["page_in_blocks"] += read_blocks
+        t["page_out_blocks"] += write_blocks
+        t["read_bytes"] += read_blocks * bb
+        t["write_bytes"] += write_blocks * bb
+        t["busy_us"] += busy_us
+
+    def _flat_trace_txn(self, read_blocks: int, write_blocks: int,
+                        duplex_us: float, co_issued: bool,
+                        name: str) -> None:
+        """Flat-pool twin of the tiered billing's timeline hook: one
+        channel, per-direction pure times under the (possibly degraded)
+        link model, the transaction's billed time as the advance."""
+        link = self.engine.link
+        if self._fx is not None:
+            factor = self._fx.bandwidth_factor(0)
+            if factor < 1.0:
+                link = link.degraded(factor)
+        bb = self.host.block_bytes
+        rd_b, wr_b = read_blocks * bb, write_blocks * bb
+        self._trace.channel_transaction(
+            [(f"{self._trace_prefix}{self.host.kinds[0]}:0", rd_b, wr_b,
+              phase_separated_time_us(link, rd_b, 0.0),
+              phase_separated_time_us(link, 0.0, wr_b),
+              duplex_us, co_issued)],
+            duplex_us, name=name)
 
     # -- allocation (request lifecycle) ------------------------------------
     def alloc(self, k: int = 1) -> list[int]:
@@ -541,6 +597,14 @@ class PagedKVPool:
                 self.stats["tier_us"] += duplex_us
                 self.stats["ddr5_us"] += self.host.ddr5_baseline_us(
                     ch_rd, ch_wr)
+                if self.engine.telemetry is not None:
+                    # the tiered path skips plan construction, so the
+                    # CAX scope attribution the flat planner does in
+                    # ``plan_kv_paging`` happens here instead.
+                    self.engine.telemetry.attribute(
+                        hint_path,
+                        read_bytes=float(stale.size) * block_bytes,
+                        write_bytes=float(outs.size) * block_bytes)
             else:
                 plan = self.engine.plan_kv_paging(
                     needed_host_blocks=stale.tolist(),
@@ -568,6 +632,11 @@ class PagedKVPool:
                     extra = self._fx.retry_penalty_us(0, duplex_us)
                     duplex_us += extra
                     serial_us += extra
+                self._flat_bill_totals(int(stale.size), int(outs.size),
+                                       duplex_us)
+                if self._trace is not None:
+                    self._flat_trace_txn(int(stale.size), int(outs.size),
+                                         duplex_us, duplex_ok, "paging")
             bp = self.stats["by_path"].setdefault(hint_path,
                                                   _fresh_path_stats())
             for st, key, val in (
@@ -735,6 +804,11 @@ class PagedKVPool:
         self.host.apply(plan)   # also closes the traffic window
         self.stats["migrations"] += len(plan)
         self.stats["migrate_us"] += plan.migrate_us
+        if len(plan) and self.engine.telemetry is not None:
+            bb = self.host.block_bytes
+            self.engine.telemetry.attribute(
+                "/serve/tier_migrate", read_bytes=len(plan) * bb,
+                write_bytes=len(plan) * bb)
         return {"migrations": len(plan)}
 
     # -- snapshot/restore ---------------------------------------------------
@@ -769,6 +843,10 @@ class PagedKVPool:
             self.stats["tier_us"] += duplex_us
             self.stats["ddr5_us"] += self.host.ddr5_baseline_us(
                 ch_rd, ch_wr)
+            if self.engine.telemetry is not None:
+                self.engine.telemetry.attribute(
+                    hint_path, read_bytes=0.0,
+                    write_bytes=float(outs.size) * self.host.block_bytes)
         else:
             plan = self.engine.plan_kv_paging(
                 needed_host_blocks=[],
@@ -790,6 +868,10 @@ class PagedKVPool:
                 extra = self._fx.retry_penalty_us(0, duplex_us)
                 duplex_us += extra
                 serial_us += extra
+            self._flat_bill_totals(0, int(outs.size), duplex_us)
+            if self._trace is not None:
+                self._flat_trace_txn(0, int(outs.size), duplex_us,
+                                     False, "flush")
         bp = self.stats["by_path"].setdefault(hint_path,
                                               _fresh_path_stats())
         for st in (self.stats, bp):
@@ -885,10 +967,10 @@ class PagedKVPool:
 
     def tier_stats(self) -> dict:
         """Per-channel placement/traffic/migration accounting plus the
-        tier A/B summary (tiered pools only)."""
-        if not self.tiered:
-            return {"tiered": False}
-        return {"tiered": True,
+        tier A/B summary. Flat pools emit the SAME keys (their single
+        channel, zeroed tier fields) so consumers never key-guard on
+        the pool flavor — the unified schema in ``core.metrics``."""
+        return {"tiered": self.tiered,
                 "channels": self.host.stats(),
                 "migrations": self.stats["migrations"],
                 "migrate_us": round(self.stats["migrate_us"], 3),

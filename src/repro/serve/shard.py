@@ -147,17 +147,36 @@ class IciMeter:
         self.axis_size = {str(a): int(mesh.shape[a])
                           for a in mesh.axis_names}
         self.by_path: dict[str, dict] = {}
+        # observability: the sharded engine attaches its Tracer (ICI
+        # busy intervals land on the same modelled clock as the
+        # DDR5/CXL tracks) and CaxRegistry; None = disabled/zero-cost.
+        self.trace = None
+        self.telemetry = None
 
     def _bill(self, axis: str, read_bytes: float, write_bytes: float
               ) -> None:
         st = self.by_path.setdefault(f"/serve/ici/{axis}",
                                      _fresh_ici_path_stats())
+        duplex_us = offload.channel_time_us(
+            self.link, read_bytes, write_bytes)
         st["bytes"] += read_bytes + write_bytes
         st["collectives"] += 1
-        st["duplex_us"] += offload.channel_time_us(
-            self.link, read_bytes, write_bytes)
+        st["duplex_us"] += duplex_us
         st["serial_us"] += offload.phase_separated_time_us(
             self.link, read_bytes, write_bytes)
+        if self.trace is not None:
+            self.trace.channel_transaction(
+                [(f"ici:{axis}", read_bytes, write_bytes,
+                  offload.phase_separated_time_us(
+                      self.link, read_bytes, 0.0),
+                  offload.phase_separated_time_us(
+                      self.link, 0.0, write_bytes),
+                  duplex_us, True)],
+                duplex_us, name="collective")
+        if self.telemetry is not None:
+            self.telemetry.attribute(
+                f"/serve/ici/{axis}",
+                collective_bytes=read_bytes + write_bytes)
 
     def note_allreduce(self, axis: str, payload_bytes: float) -> None:
         """Ring all-reduce of ``payload_bytes`` per device over ``axis``:
@@ -326,6 +345,18 @@ class ShardedKVPool:
         self.host = _ShardedHostView(self.shards)
         self.tiered = self.shards[0].tiered
         self._steps = 0                              # facade transactions
+
+    # -- observability -------------------------------------------------------
+    def attach_trace(self, tracer, prefix: str = "") -> None:
+        """Fan the tracer out to every shard pool, namespacing each
+        shard's channel tracks (``shard0/ddr5:0`` ...) on the one
+        shared modelled clock."""
+        for s, sh in enumerate(self.shards):
+            sh.attach_trace(tracer, prefix=f"{prefix}shard{s}/")
+
+    def attach_telemetry(self, registry) -> None:
+        for sh in self.shards:
+            sh.attach_telemetry(registry)
 
     # -- id routing ---------------------------------------------------------
     def shard_of(self, block: int) -> int:
@@ -568,11 +599,16 @@ class ShardedKVPool:
         return st["ddr5_us"] / st["tier_us"]
 
     def tier_stats(self) -> dict:
-        if not self.tiered:
-            return {"tiered": False}
+        """Unified schema (core.metrics) for both pool flavors, plus the
+        sharded extras: per-shard detail under ``"shards"`` and the
+        merged per-channel view keyed ``shard<s>/<channel>``."""
         st = self.stats
-        return {"tiered": True,
-                "shards": [sh.tier_stats() for sh in self.shards],
+        per_shard = [sh.tier_stats() for sh in self.shards]
+        return {"tiered": self.tiered,
+                "channels": {f"shard{s}/{name}": ch
+                             for s, ts in enumerate(per_shard)
+                             for name, ch in ts["channels"].items()},
+                "shards": per_shard,
                 "migrations": st["migrations"],
                 "migrate_us": round(st["migrate_us"], 3),
                 "tier_us": round(st["tier_us"], 3),
@@ -643,6 +679,10 @@ class ShardedServeEngine(ServeEngine):
         self.slots_per_shard = cfg.max_batch // self.data_size
         self._ici = IciMeter(mesh)
         super().__init__(api, params, cfg, hints)
+        # the base __init__ built the tracer/CAX registry; the ICI links
+        # join the same modelled clock and scope tree.
+        self._ici.trace = self._tracer
+        self._ici.telemetry = self.telemetry
         self._place_device_state()
         self._pool_device = next(iter(jax.devices()))
         # per-layer tensor-parallel psum payload (bf16 activations): the

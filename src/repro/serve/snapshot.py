@@ -495,6 +495,8 @@ class SnapshotManager:
         paging path, persist the packed engine tree, rotate the journal
         generation, and re-persist any still-pending resubmit records so
         they survive the old generation being superseded."""
+        tracer = getattr(engine, "_tracer", None)
+        t0 = tracer.now_us() if tracer is not None else 0.0
         while engine._inflight:
             engine._reconcile(engine._inflight[0])
         engine.pool.flush_dirty()
@@ -512,6 +514,8 @@ class SnapshotManager:
                 self._append(rec)
         self._last_cut = m
         self.stats["snapshots_taken"] += 1
+        if tracer is not None:
+            tracer.span("snapshot_cut", t0, megastep=m)
         # journal retention follows snapshot retention: generations older
         # than the oldest kept snapshot can never be replayed again.
         kept = [int(fn.split("_")[1]) for fn in os.listdir(self.dir)
@@ -538,6 +542,8 @@ class SnapshotManager:
         ``engine.failed`` — instead of being replayed out of order.
         ``disarm`` drops scheduled crash events so the death just
         recovered from does not re-fire during replay."""
+        tracer = getattr(engine, "_tracer", None)
+        t0 = tracer.now_us() if tracer is not None else 0.0
         tree, manifest = self.ckpt.restore(step)
         m = int(manifest["step"])
         _install(engine, _unpack(tree))
@@ -587,6 +593,9 @@ class SnapshotManager:
             _rid.seek(1 + max([*resub, *casualties]))
         if engine._fx is not None and disarm:
             engine._fx.disarm_crashes()
+        if tracer is not None:
+            tracer.span("restore", t0, restored_step=m,
+                        casualties=len(casualties))
         return {"restored_step": m,
                 "journal_entries": len(oracle) + len(resub),
                 "pending_resubmits": len(self._resubmit),

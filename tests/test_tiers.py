@@ -219,7 +219,15 @@ class TestTieredBilling:
         _fill(flat, range(4), path="/serve/kv_cache")
         flat.step(range(4, 8), hint_path="/serve/kv_cache")
         assert flat.tier_speedup() == 1.0
-        assert flat.tier_stats() == {"tiered": False}
+        # unified schema: flat pools emit the same keys, tier fields
+        # zeroed, with the single flat channel's billing present
+        st = flat.tier_stats()
+        assert st["tiered"] is False
+        assert st["migrations"] == 0 and st["migrate_us"] == 0.0
+        assert st["tier_us"] == 0.0 and st["ddr5_us"] == 0.0
+        assert st["tier_speedup"] == 1.0
+        (only_ch,) = st["channels"].values()
+        assert only_ch["page_in_blocks"] + only_ch["page_out_blocks"] > 0
 
 
 class TestMigrations:
@@ -385,7 +393,12 @@ class TestEngineIntegration:
         assert flat[0] == tiered[0] == frozen[0]
         assert flat[1] == tiered[1] == frozen[1]
         assert tiered[2]["tiers"]["tiered"] is True
-        assert "tiers" not in flat[2]
+        # unified stats schema: the flat pool reports the same "tiers"
+        # keys (zeroed tier fields) instead of dropping the block
+        assert flat[2]["tiers"]["tiered"] is False
+        assert set(flat[2]["tiers"]) == set(tiered[2]["tiers"])
+        assert flat[2]["tiers"]["migrations"] == 0
+        assert flat[2]["tier_speedup"] == 1.0
 
     def test_tiered_stats_reported(self, api, params):
         _, _, st = _serve(api, params, megastep=4, tiers="ddr5:2,cxl:2")
